@@ -1,0 +1,64 @@
+"""Fault-tolerance drills (beyond-paper): overhead of surviving failures
+and stragglers vs a clean run of the same workflow."""
+from __future__ import annotations
+
+from repro.core import FaultConfig
+from repro.configs.paper_pipeline import streamflow_doc_full_hpc
+from benchmarks.common import warmup, WF_ARGS, run_doc
+
+
+def _doc(fail=None, straggle=None):
+    doc = streamflow_doc_full_hpc(**WF_ARGS)
+    if fail or straggle:
+        inner = doc["models"]["occam"]
+        doc["models"]["occam"] = {"type": "simcluster", "config": {
+            "inner": {"type": "mesh", "config": inner["config"]},
+            **({"fail": fail} if fail else {}),
+            **({"straggle": straggle} if straggle else {}),
+        }}
+    return doc
+
+
+def run(verbose=True):
+    warmup()
+    fault = FaultConfig(max_retries=2, backoff_s=0.02, speculative=True,
+                        straggler_factor=2.5, straggler_min_samples=2,
+                        straggler_min_elapsed_s=0.1)
+    rows = []
+    scenarios = [
+        ("clean", _doc()),
+        ("1-failure", _doc(fail=[{"match": "/chains/1/count",
+                                  "attempts": [0]}])),
+        ("straggler", _doc(straggle=[{"match": "/chains/2/seurat",
+                                      "attempts": [0], "seconds": 3.0}])),
+    ]
+    for name, doc in scenarios:
+        ex, res, wall = run_doc(doc, fault=fault)
+        retries = len([e for e in res.events
+                       if e.status.startswith("failed")])
+        spec = len([e for e in res.events if e.speculative])
+        rows.append({"scenario": name, "wall_s": round(wall, 2),
+                     "failed_attempts": retries,
+                     "speculative_twins": spec,
+                     "completed": len([e for e in res.events
+                                       if e.status == "completed"])})
+    if verbose:
+        hdr = list(rows[0])
+        print(" | ".join(f"{h:>18s}" for h in hdr))
+        for r in rows:
+            print(" | ".join(f"{str(r[h]):>18s}" for h in hdr))
+        clean, fail1, strag = rows
+        print(f"\n[claim] workflow survives injected failure with "
+              f"{fail1['wall_s'] / clean['wall_s']:.2f}x wall overhead; "
+              f"speculation caps the straggler at "
+              f"{strag['wall_s'] / clean['wall_s']:.2f}x "
+              f"(injected delay was 3.0s)")
+    return rows
+
+
+def main(argv=None):
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,65 @@
+"""Shared benchmark plumbing."""
+from __future__ import annotations
+
+import time
+from typing import Dict
+
+from repro.core import StreamFlowExecutor, load_streamflow_file
+
+WF_ARGS = dict(n_chains=4, train_steps=3, rows_per_chain=12, seq_len=64,
+               batch=4, vocab=256, d_model=48)
+
+_WARM = False
+
+
+def warmup():
+    """Populate the jit caches once so benchmark walls measure execution,
+    not first-call compilation."""
+    global _WARM
+    if _WARM:
+        return
+    from repro.configs.paper_pipeline import (streamflow_doc_full_hpc,
+                                              streamflow_doc_hybrid)
+    # keep tensor shapes identical to WF_ARGS so every jit cache is hot,
+    # and warm BOTH execution contexts (mesh site and local site) — the
+    # jit cache keys on the ambient mesh
+    # NOTE: train_steps must match too — the jitted step is cached per
+    # optimizer schedule constants
+    args = {**WF_ARGS, "n_chains": 1}
+    run_doc(streamflow_doc_full_hpc(**args))
+    run_doc(streamflow_doc_hybrid(**args))
+    _WARM = True
+
+
+def run_doc(doc, *, policy=None, fault=None):
+    cfg = load_streamflow_file(doc)
+    if policy:
+        cfg.policy = policy
+    ex = StreamFlowExecutor.from_config(cfg)
+    if fault is not None:
+        ex.fault = fault
+    name, entry = next(iter(cfg.workflows.items()))
+    t0 = time.time()
+    res = ex.run(entry.workflow, entry.bindings, inputs={"seed": 0})
+    return ex, res, time.time() - t0
+
+
+def ascii_timeline(res, width: int = 60) -> str:
+    rows = res.timeline_rows()
+    if not rows:
+        return "(empty)"
+    t_end = max(r[3] for r in rows) or 1.0
+    out = []
+    for step, resource, t0, t1, status, attempt, spec in rows:
+        a = int(t0 / t_end * width)
+        b = max(int(t1 / t_end * width), a + 1)
+        bar = " " * a + "#" * (b - a)
+        tag = "*" if spec else ("!" if status.startswith("failed") else "")
+        out.append(f"{step:<22s}|{bar:<{width}}| {t1 - t0:6.2f}s {tag}")
+    return "\n".join(out)
+
+
+def transfer_line(ex) -> Dict[str, str]:
+    s = ex.data.transfer_summary()
+    return {k: f"n={int(v['n'])} bytes={int(v['bytes'])} "
+               f"t={v['seconds']:.3f}s" for k, v in sorted(s.items())}

@@ -1,0 +1,71 @@
+"""Benchmark harness entry point — one function per paper table/figure.
+
+Prints ``name,us_per_call,derived`` CSV rows (plus each benchmark's own
+detailed output above them).  Wall-clock numbers on this CPU container are
+structural (ordering / counts / overlap), not TPU timings; the TPU-facing
+performance analysis lives in launch/roofline.py + EXPERIMENTS.md.
+"""
+from __future__ import annotations
+
+import time
+
+
+def _timed(fn, *a, **kw):
+    t0 = time.time()
+    out = fn(*a, **kw)
+    return out, (time.time() - t0) * 1e6
+
+
+def main() -> None:
+    from benchmarks import (bench_timeline, bench_transfer, bench_scheduler,
+                            bench_deployment, bench_fault)
+    rows = []
+
+    print("=" * 72)
+    print("bench_timeline — paper Fig.8/Fig.9 (full-HPC vs hybrid)")
+    print("=" * 72)
+    out, us = _timed(bench_timeline.run, "both")
+    hybrid = out.get("hybrid (Fig.9)", {})
+    full = out.get("full-hpc (Fig.8)", {})
+    rows.append(("fig8_fig9_timeline", us,
+                 f"hybrid/full_wall={hybrid.get('wall_s', 0) / max(full.get('wall_s', 1), 1e-9):.2f};"
+                 f"transfer_frac={hybrid.get('transfer_frac', 0):.4f}"))
+
+    print("\n" + "=" * 72)
+    print("bench_transfer — §4.6 R3/R4 transfer strategies")
+    print("=" * 72)
+    out, us = _timed(bench_transfer.run)
+    big = out[-2]
+    rows.append(("transfer_strategies", us,
+                 f"two_step_32MiB={big['two_step_s']:.4f}s;"
+                 f"elided={big['elided_s']:.5f}s"))
+
+    print("\n" + "=" * 72)
+    print("bench_scheduler — §4.4 policies")
+    print("=" * 72)
+    out, us = _timed(bench_scheduler.run)
+    rows.append(("scheduler_policies", us,
+                 ";".join(f"{r['policy']}={r['bytes_moved']}" for r in out)))
+
+    print("\n" + "=" * 72)
+    print("bench_deployment — §4.5 lifecycle strategies")
+    print("=" * 72)
+    out, us = _timed(bench_deployment.run)
+    rows.append(("deployment_lifecycle", us,
+                 ";".join(f"{r['strategy']}={r['site_s']}" for r in out)))
+
+    print("\n" + "=" * 72)
+    print("bench_fault — failure/straggler drills (beyond-paper)")
+    print("=" * 72)
+    out, us = _timed(bench_fault.run)
+    rows.append(("fault_drills", us,
+                 ";".join(f"{r['scenario']}={r['wall_s']}" for r in out)))
+
+    print("\n" + "=" * 72)
+    print("name,us_per_call,derived")
+    for name, us, derived in rows:
+        print(f"{name},{us:.0f},{derived}")
+
+
+if __name__ == "__main__":
+    main()

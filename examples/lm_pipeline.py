@@ -1,0 +1,141 @@
+"""LM production pipeline through the StreamFlow layer: the paper's hybrid
+pattern applied to an ML lifecycle.
+
+    /tokenize   (cloud)  corpus -> packed token shards
+    /pretrain   (HPC)    real JAX training, checkpointing inside the step
+    /eval       (cloud)  held-out perplexity from the trained params
+    /export     (cloud)  int8-quantized parameter package
+
+The trained parameters cross the HPC->cloud boundary once (two-step copy);
+eval and export then stay cloud-local (R4 keeps the params in place).
+
+    PYTHONPATH=src python examples/lm_pipeline.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+import numpy as np  # noqa: E402
+
+from repro.core import (ModelSpec, Step, StreamFlowExecutor,  # noqa: E402
+                        Workflow)
+from repro.core.streamflow_file import Binding  # noqa: E402
+from repro.configs.paper_pipeline import tiny_lm  # noqa: E402
+
+CFG = tiny_lm(vocab=512, d_model=64, n_layers=2)
+
+
+def tokenize(inputs, ctx):
+    from repro.data.synthetic import SyntheticCorpus, pack_documents
+    corpus = SyntheticCorpus(CFG.vocab_size, seed=int(inputs["seed"]))
+    it = corpus.documents(0)
+    return {"train_shard": pack_documents(it, 128, 64),
+            "eval_shard": pack_documents(it, 128, 16)}
+
+
+def pretrain(inputs, ctx):
+    import jax
+    import jax.numpy as jnp
+    from repro.models import registry as R
+    from repro.optim import AdamWConfig, adamw_init, adamw_update
+
+    shard = inputs["shard"]
+    params, _ = R.init_params(jax.random.key(0), CFG)
+    ocfg = AdamWConfig(lr=1e-3, warmup_steps=5, total_steps=30)
+    opt = adamw_init(params)
+
+    @jax.jit
+    def step(p, o, tok, lab):
+        (l, m), g = jax.value_and_grad(
+            lambda q: R.forward_train(q, CFG, {"tokens": tok, "labels": lab}),
+            has_aux=True)(p)
+        p, o, _ = adamw_update(g, o, p, ocfg)
+        return p, o, l
+
+    losses = []
+    for s in range(30):
+        lo = (s * 8) % (shard.shape[0] - 8)
+        blk = shard[lo:lo + 8]
+        params, opt, loss = step(params, opt, jnp.asarray(blk[:, :-1]),
+                                 jnp.asarray(blk[:, 1:]))
+        losses.append(float(loss))
+    return {"trained_params": jax.tree.map(np.asarray, params),
+            "train_log": {"losses": losses}}
+
+
+def evaluate(inputs, ctx):
+    import jax
+    import jax.numpy as jnp
+    from repro.models import registry as R
+    params = jax.tree.map(jnp.asarray, inputs["params"])
+    shard = inputs["shard"]
+    loss, m = jax.jit(lambda p, t, l: R.forward_train(
+        p, CFG, {"tokens": t, "labels": l}))(
+        params, jnp.asarray(shard[:, :-1]), jnp.asarray(shard[:, 1:]))
+    return {"eval_report": {"nll": float(m["nll"]),
+                            "ppl": float(np.exp(min(float(m["nll"]), 20.0))),
+                            "acc": float(m["acc"])}}
+
+
+def export(inputs, ctx):
+    from repro.optim import quantize_int8
+    import jax
+    package = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(
+            inputs["params"])[0]:
+        import jax.numpy as jnp
+        q, scale = quantize_int8(jnp.asarray(leaf))
+        key = jax.tree_util.keystr(path)
+        package[key] = {"int8": np.asarray(q), "scale": float(scale)}
+    nbytes = sum(v["int8"].nbytes for v in package.values())
+    return {"package": {"n_tensors": len(package), "int8_bytes": nbytes}}
+
+
+def build_workflow():
+    wf = Workflow("lm-pipeline")
+    wf.add_step(Step("/tokenize", tokenize, {"seed": "seed"},
+                     ("train_shard", "eval_shard")))
+    wf.add_step(Step("/pretrain", pretrain, {"shard": "train_shard"},
+                     ("trained_params", "train_log")))
+    wf.add_step(Step("/eval", evaluate, {"params": "trained_params",
+                                         "shard": "eval_shard"},
+                     ("eval_report",)))
+    wf.add_step(Step("/export", export, {"params": "trained_params"},
+                     ("package",)))
+    wf.validate()
+    return wf
+
+
+def main():
+    models = {
+        "hpc": ModelSpec("hpc", "mesh", {
+            "topology": {"data": 16, "model": 16},
+            "services": {"trainer": {"replicas": 1, "cores": 4,
+                                     "memory_gb": 16}}}),
+        "cloud": ModelSpec("cloud", "local", {
+            "services": {"worker": {"replicas": 2}}}),
+    }
+    bindings = [
+        Binding("/", "cloud", "worker"),
+        Binding("/pretrain", "hpc", "trainer"),
+    ]
+    ex = StreamFlowExecutor(models)
+    res = ex.run(build_workflow(), bindings, inputs={"seed": 0})
+
+    log = res.outputs["train_log"]["losses"]
+    rep = res.outputs["eval_report"]
+    pkg = res.outputs["package"]
+    print(f"\n[pipeline] train loss {log[0]:.3f} -> {log[-1]:.3f}")
+    print(f"[pipeline] eval nll={rep['nll']:.3f} ppl={rep['ppl']:.1f} "
+          f"acc={rep['acc']:.3f}")
+    print(f"[pipeline] exported {pkg['n_tensors']} tensors, "
+          f"{pkg['int8_bytes']:,} int8 bytes")
+    print("[pipeline] transfers:",
+          {k: (int(v['n']), int(v['bytes']))
+           for k, v in ex.data.transfer_summary().items()})
+    assert log[-1] < log[0], "training did not improve"
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,20 @@
+"""Batched-serving example: prefill + synchronous batched decode over a
+request queue for a reduced Mixtral (MoE + sliding-window attention).
+
+    PYTHONPATH=src python examples/serve_batched.py
+"""
+import os
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+
+def main():
+    from repro.launch.serve import main as serve_main
+    serve_main(["--arch", "mixtral-8x7b", "--smoke",
+                "--requests", "8", "--slots", "4",
+                "--prompt-len", "32", "--gen", "16"])
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+from repro.checkpoint.store import (save_checkpoint, load_checkpoint,
+                                    latest_step, restore_into, place_tree,
+                                    CheckpointManager)

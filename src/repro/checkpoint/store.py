@@ -1,0 +1,191 @@
+"""Step-atomic sharded checkpointing with elastic restore.
+
+Layout (one directory per step, committed by rename):
+
+    <root>/step_00001230.tmp/...      # in-flight write
+    <root>/step_00001230/
+        manifest.msgpack              # paths, shapes, dtypes, meta
+        host0000.npz                  # this host's leaf payloads
+    <root>/LATEST                     # text file, atomically replaced
+
+Elasticity: leaves are stored as full logical arrays keyed by tree path, so a
+checkpoint written from a (16,16) mesh restores onto (2,16,16) or a single
+device — placement is re-derived from the *target* shardings at load time
+(``place_tree``).  At real multi-pod scale each host writes only the shards
+it owns and restore reads the union; the file format already carries per-host
+payload files to keep that path open.
+"""
+from __future__ import annotations
+
+import os
+import zlib
+import shutil
+import tempfile
+from typing import Any, Dict, Optional, Tuple
+
+import msgpack
+import numpy as np
+
+import jax
+
+
+def _path_str(path) -> str:
+    return jax.tree_util.keystr(path)
+
+
+def flatten_with_paths(tree) -> Dict[str, Any]:
+    return {_path_str(p): v
+            for p, v in jax.tree_util.tree_flatten_with_path(tree)[0]}
+
+
+def save_checkpoint(root: str, step: int, trees: Dict[str, Any],
+                    meta: Optional[dict] = None, *, host_id: int = 0,
+                    compress: bool = False) -> str:
+    """Write {name: pytree} atomically. Returns the committed directory."""
+    os.makedirs(root, exist_ok=True)
+    final = os.path.join(root, f"step_{step:08d}")
+    tmp = final + f".tmp{host_id}"
+    if os.path.exists(tmp):
+        shutil.rmtree(tmp)
+    os.makedirs(tmp)
+
+    manifest: Dict[str, Any] = {"step": step, "meta": meta or {},
+                                "compress": compress, "leaves": {}}
+    payload: Dict[str, bytes] = {}
+    for name, tree in trees.items():
+        for pstr, leaf in flatten_with_paths(tree).items():
+            key = f"{name}{pstr}"
+            arr = np.asarray(jax.device_get(leaf))
+            # bf16 isn't a numpy dtype on older stacks; store raw + dtype str
+            manifest["leaves"][key] = {
+                "shape": list(arr.shape), "dtype": str(arr.dtype)}
+            raw = arr.tobytes()
+            payload[key] = zlib.compress(raw, 1) if compress else raw
+
+    with open(os.path.join(tmp, "manifest.msgpack"), "wb") as f:
+        f.write(msgpack.packb(manifest))
+    np.savez(os.path.join(tmp, f"host{host_id:04d}.npz"),
+             **{k: np.frombuffer(v, np.uint8) for k, v in payload.items()})
+    # step-atomic commit
+    if os.path.exists(final):
+        shutil.rmtree(final)
+    os.replace(tmp, final)
+    _write_latest(root, step)
+    return final
+
+
+def _write_latest(root: str, step: int):
+    fd, tmp = tempfile.mkstemp(dir=root)
+    with os.fdopen(fd, "w") as f:
+        f.write(str(step))
+    os.replace(tmp, os.path.join(root, "LATEST"))
+
+
+def latest_step(root: str) -> Optional[int]:
+    """Newest committed step (validates the directory exists)."""
+    marker = os.path.join(root, "LATEST")
+    candidates = []
+    if os.path.exists(marker):
+        with open(marker) as f:
+            try:
+                candidates.append(int(f.read().strip()))
+            except ValueError:
+                pass
+    if os.path.isdir(root):  # fall back to scanning committed dirs
+        for d in os.listdir(root):
+            if d.startswith("step_") and not d.endswith(".tmp"):
+                try:
+                    candidates.append(int(d.split("_")[1].split(".")[0]))
+                except (IndexError, ValueError):
+                    continue
+    valid = [s for s in sorted(set(candidates), reverse=True)
+             if os.path.exists(os.path.join(
+                 root, f"step_{s:08d}", "manifest.msgpack"))]
+    return valid[0] if valid else None
+
+
+def load_checkpoint(root: str, step: Optional[int] = None
+                    ) -> Tuple[int, Dict[str, np.ndarray], dict]:
+    """Returns (step, {path_key: ndarray}, meta)."""
+    if step is None:
+        step = latest_step(root)
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint under {root}")
+    d = os.path.join(root, f"step_{step:08d}")
+    with open(os.path.join(d, "manifest.msgpack"), "rb") as f:
+        manifest = msgpack.unpackb(f.read())
+    leaves: Dict[str, np.ndarray] = {}
+    for fn in sorted(os.listdir(d)):
+        if not fn.endswith(".npz"):
+            continue
+        with np.load(os.path.join(d, fn)) as z:
+            for key in z.files:
+                info = manifest["leaves"][key]
+                raw = z[key].tobytes()
+                if manifest.get("compress"):
+                    raw = zlib.decompress(raw)
+                arr = np.frombuffer(raw, dtype=np.dtype(info["dtype"]))
+                leaves[key] = arr.reshape(info["shape"]).copy()
+    return manifest["step"], leaves, manifest.get("meta", {})
+
+
+def restore_into(template, leaves: Dict[str, np.ndarray], name: str):
+    """Rebuild a pytree shaped like ``template`` from path-keyed leaves."""
+    flat, treedef = jax.tree_util.tree_flatten_with_path(template)
+    out = []
+    for path, tmpl in flat:
+        key = f"{name}{_path_str(path)}"
+        if key not in leaves:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = leaves[key]
+        want = getattr(tmpl, "dtype", None)
+        if want is not None and str(arr.dtype) != str(want):
+            arr = arr.astype(want)          # e.g. bfloat16 round-trip
+        out.append(arr)
+    return jax.tree_util.tree_unflatten(treedef, [v for v in out])
+
+
+def place_tree(tree, shardings):
+    """Elastic placement: device_put each leaf with its target sharding.
+    Works regardless of the mesh the checkpoint was written from."""
+    return jax.tree.map(lambda x, s: jax.device_put(x, s), tree, shardings)
+
+
+class CheckpointManager:
+    """Keep-last-k manager with auto-resume — the fault-tolerance anchor."""
+
+    def __init__(self, root: str, keep: int = 3, host_id: int = 0):
+        self.root = root
+        self.keep = keep
+        self.host_id = host_id
+
+    def save(self, step: int, trees: Dict[str, Any],
+             meta: Optional[dict] = None):
+        path = save_checkpoint(self.root, step, trees, meta,
+                               host_id=self.host_id)
+        self._gc()
+        return path
+
+    def _gc(self):
+        steps = sorted(
+            int(d.split("_")[1]) for d in os.listdir(self.root)
+            if d.startswith("step_") and not d.endswith(".tmp")
+            and os.path.exists(os.path.join(self.root, d, "manifest.msgpack")))
+        for s in steps[: -self.keep]:
+            shutil.rmtree(os.path.join(self.root, f"step_{s:08d}"),
+                          ignore_errors=True)
+
+    def restore_latest(self, templates: Dict[str, Any],
+                       shardings: Optional[Dict[str, Any]] = None):
+        """Returns (step, {name: tree}, meta) or None if no checkpoint."""
+        step = latest_step(self.root)
+        if step is None:
+            return None
+        step, leaves, meta = load_checkpoint(self.root, step)
+        out = {}
+        for name, tmpl in templates.items():
+            tree = restore_into(tmpl, leaves, name)
+            if shardings and name in shardings:
+                tree = place_tree(tree, shardings[name])
+            out[name] = tree
+        return step, out, meta

@@ -1,0 +1,309 @@
+"""The paper's single-cell transcriptomics workflow (§5), re-grounded.
+
+Structure is reproduced exactly (Fig. 7): one splitter fanning out to
+``n_chains`` independent 3-step chains:
+
+  /mkfastq                    -> 6 token shards        (fastq creation)
+  /chains/<i>/count           -> trained model + stats (CellRanger count:
+                                 the heavy step — here: real JAX training)
+  /chains/<i>/seurat          -> doc embeddings + clusters (Seurat: real
+                                 forward passes + k-means)
+  /chains/<i>/singler         -> cluster labels       (SingleR: reference
+                                 profile matching)
+
+Output-size ordering mirrors the paper (§5.2): count output is small
+(params of a tiny LM, ~MBs), seurat output is the big one (per-document
+embeddings), singler output is tiny — so the locality-aware scheduler has
+the same shape of decisions to make.
+"""
+from __future__ import annotations
+
+from functools import lru_cache
+from typing import Dict
+
+import numpy as np
+
+from repro.core.workflow import Requirements, Step, Workflow
+from repro.models.config import ArchConfig
+
+
+@lru_cache(maxsize=16)
+def _jitted_train_step(cfg: ArchConfig, lr: float, total_steps: int):
+    """One compiled train step shared by every chain (cfg is hashable)."""
+    import jax
+    from repro.models import registry as R
+    from repro.optim import AdamWConfig, adamw_update
+
+    ocfg = AdamWConfig(lr=lr, warmup_steps=5, total_steps=total_steps,
+                       schedule="cosine")
+
+    @jax.jit
+    def step(p, o, tok, lab):
+        (l, m), g = jax.value_and_grad(
+            lambda q: R.forward_train(q, cfg, {"tokens": tok, "labels": lab}),
+            has_aux=True)(p)
+        p, o, _ = adamw_update(g, o, p, ocfg)
+        return p, o, l
+
+    return step
+
+
+@lru_cache(maxsize=16)
+def _jitted_embed(cfg: ArchConfig):
+    import jax
+    import jax.numpy as jnp
+    from repro.models import registry as R
+
+    @jax.jit
+    def embed(params, tok):
+        logits = R.forward_logits(params, cfg, {"tokens": tok})
+        return jnp.mean(logits.astype(jnp.float32), axis=1)
+
+    return embed
+
+
+def tiny_lm(vocab: int = 512, d_model: int = 64, n_layers: int = 2
+            ) -> ArchConfig:
+    return ArchConfig(
+        name="pipeline-lm", family="dense", n_layers=n_layers,
+        d_model=d_model, n_heads=4, n_kv_heads=4, d_ff=2 * d_model,
+        vocab_size=vocab, remat="none")
+
+
+# ---------------------------------------------------------------------------
+# Step bodies (fn(inputs, ctx) -> outputs). Imports stay inside the functions
+# so the workflow graph can be built without touching jax.
+# ---------------------------------------------------------------------------
+
+def _split_fn(n_chains: int, rows_per_chain: int, seq_len: int, vocab: int):
+    def fn(inputs: Dict, ctx) -> Dict:
+        from repro.data.synthetic import SyntheticCorpus, pack_documents
+        corpus = SyntheticCorpus(vocab, seed=int(inputs["seed"]))
+        out = {}
+        it = corpus.documents(0)
+        for i in range(n_chains):
+            out[f"shard{i}"] = pack_documents(it, seq_len, rows_per_chain)
+        return out
+    return fn
+
+
+def _count_fn(chain: int, cfg: ArchConfig, train_steps: int, batch: int):
+    def fn(inputs: Dict, ctx) -> Dict:
+        import jax
+        import jax.numpy as jnp
+        from repro.models import registry as R
+        from repro.optim import adamw_init
+
+        shard = inputs["shard"]                      # (rows, seq+1) int32
+        params, _ = R.init_params(jax.random.key(chain), cfg)
+        opt = adamw_init(params)
+        step = _jitted_train_step(cfg, 1e-3, train_steps)
+
+        losses = []
+        rows = shard.shape[0]
+        for s in range(train_steps):
+            lo = (s * batch) % max(rows - batch, 1)
+            blk = shard[lo: lo + batch]
+            p_tok, p_lab = blk[:, :-1], blk[:, 1:]
+            params, opt, loss = step(params, opt, jnp.asarray(p_tok),
+                                     jnp.asarray(p_lab))
+            losses.append(float(loss))
+        params_np = jax.tree.map(lambda a: np.asarray(a), params)
+        return {f"model{chain}": params_np,
+                f"stats{chain}": {"losses": losses}}
+    return fn
+
+
+def _seurat_fn(chain: int, cfg: ArchConfig, n_clusters: int = 4):
+    def fn(inputs: Dict, ctx) -> Dict:
+        import jax
+        import jax.numpy as jnp
+        from repro.models import registry as R
+
+        shard = inputs["shard"]
+        params = jax.tree.map(jnp.asarray, inputs["model"])
+        embed = _jitted_embed(cfg)
+        embs = np.asarray(embed(params, jnp.asarray(shard[:, :-1])))
+        # k-means (the Louvain/clustering stand-in), deterministic init
+        rng = np.random.default_rng(chain)
+        cent = embs[rng.choice(len(embs), n_clusters, replace=False)]
+        for _ in range(8):
+            d = ((embs[:, None] - cent[None]) ** 2).sum(-1)
+            assign = d.argmin(1)
+            for k in range(n_clusters):
+                pts = embs[assign == k]
+                if len(pts):
+                    cent[k] = pts.mean(0)
+        return {f"clusters{chain}": {"assign": assign.astype(np.int32),
+                                     "centroids": cent,
+                                     "embeddings": embs}}
+    return fn
+
+
+def _singler_fn(chain: int, n_types: int = 6):
+    def fn(inputs: Dict, ctx) -> Dict:
+        cl = inputs["clusters"]
+        cent = cl["centroids"]
+        rng = np.random.default_rng(1234)          # the reference database
+        ref = rng.standard_normal((n_types, cent.shape[1])).astype(np.float32)
+        # Spearman-ish: rank-correlate centroids against reference profiles
+        def ranks(x):
+            return np.argsort(np.argsort(x, axis=-1), axis=-1).astype(np.float32)
+        rc, rr = ranks(cent), ranks(ref)
+        rc = (rc - rc.mean(-1, keepdims=True))
+        rr = (rr - rr.mean(-1, keepdims=True))
+        corr = (rc @ rr.T) / (
+            np.linalg.norm(rc, axis=-1, keepdims=True)
+            * np.linalg.norm(rr, axis=-1).clip(1e-9))
+        labels = corr.argmax(-1).astype(np.int32)
+        return {f"labels{chain}": {"cluster_types": labels,
+                                   "confidence": corr.max(-1)}}
+    return fn
+
+
+# ---------------------------------------------------------------------------
+# Workflow builder (referenced from StreamFlow files)
+# ---------------------------------------------------------------------------
+
+def build_workflow(n_chains: int = 6, rows_per_chain: int = 32,
+                   seq_len: int = 128, train_steps: int = 6,
+                   batch: int = 8, vocab: int = 512, d_model: int = 64
+                   ) -> Workflow:
+    cfg = tiny_lm(vocab=vocab, d_model=d_model)
+    wf = Workflow("single-cell")
+    wf.add_step(Step(
+        path="/mkfastq",
+        fn=_split_fn(n_chains, rows_per_chain, seq_len, vocab),
+        inputs={"seed": "seed"},
+        outputs=tuple(f"shard{i}" for i in range(n_chains)),
+        requirements=Requirements(cores=1, memory_gb=1),
+    ))
+    for i in range(n_chains):
+        wf.add_step(Step(
+            path=f"/chains/{i}/count",
+            fn=_count_fn(i, cfg, train_steps, batch),
+            inputs={"shard": f"shard{i}"},
+            outputs=(f"model{i}", f"stats{i}"),
+            requirements=Requirements(cores=1, memory_gb=2),
+        ))
+        wf.add_step(Step(
+            path=f"/chains/{i}/seurat",
+            fn=_seurat_fn(i, cfg),
+            inputs={"shard": f"shard{i}", "model": f"model{i}"},
+            outputs=(f"clusters{i}",),
+            requirements=Requirements(cores=1, memory_gb=2),
+        ))
+        wf.add_step(Step(
+            path=f"/chains/{i}/singler",
+            fn=_singler_fn(i),
+            inputs={"clusters": f"clusters{i}"},
+            outputs=(f"labels{i}",),
+            requirements=Requirements(cores=1, memory_gb=1),
+        ))
+    wf.validate()
+    return wf
+
+
+# ---------------------------------------------------------------------------
+# Ready-made StreamFlow documents for the paper's two experiments
+# ---------------------------------------------------------------------------
+
+def streamflow_doc_full_hpc(n_chains: int = 6, **wf_args) -> dict:
+    """Fig. 8: everything on one HPC site (six nodes, both containers)."""
+    args = {"n_chains": n_chains, **wf_args}
+    return {
+        "version": "v1.0",
+        "models": {
+            "occam": {"type": "mesh", "config": {
+                "topology": {"data": 16, "model": 16},
+                "shared_store": True,            # /archive + /scratch
+                "services": {
+                    "cellranger": {"replicas": n_chains, "cores": 2,
+                                   "memory_gb": 8},
+                    "r_env": {"replicas": n_chains, "cores": 2,
+                              "memory_gb": 8},
+                }}},
+        },
+        "workflows": {
+            "single-cell": {
+                "type": "python",
+                "config": {"module": "repro.configs.paper_pipeline",
+                           "builder": "build_workflow", "args": args},
+                "bindings": [
+                    {"step": "/mkfastq",
+                     "target": {"model": "occam", "service": "cellranger"}},
+                    {"step": "/chains",
+                     "target": {"model": "occam", "service": "r_env"}},
+                    # deepest-path-wins: counts go to cellranger
+                    *[{"step": f"/chains/{i}/count",
+                       "target": {"model": "occam", "service": "cellranger"}}
+                      for i in range(n_chains)],
+                ],
+            }
+        },
+        "scheduling": {"policy": "data_locality"},
+    }
+
+
+def streamflow_doc_single_service(n_chains: int = 6, **wf_args) -> dict:
+    """Scheduler-bench topology: ONE pool of identical nodes with private
+    stores, every step bound to it — placement is purely the Policy's
+    choice, so locality-vs-naive differences are visible in bytes moved."""
+    args = {"n_chains": n_chains, **wf_args}
+    return {
+        "version": "v1.0",
+        "models": {
+            "pool": {"type": "local", "config": {
+                "shared_store": False,
+                "services": {"node": {"replicas": n_chains, "cores": 2,
+                                      "memory_gb": 8}}}},
+        },
+        "workflows": {
+            "single-cell": {
+                "type": "python",
+                "config": {"module": "repro.configs.paper_pipeline",
+                           "builder": "build_workflow", "args": args},
+                "bindings": [
+                    {"step": "/",
+                     "target": {"model": "pool", "service": "node"}},
+                ],
+            }
+        },
+        "scheduling": {"policy": "data_locality"},
+    }
+
+
+def streamflow_doc_hybrid(n_chains: int = 6, **wf_args) -> dict:
+    """Fig. 9: CellRanger steps on the HPC site, R steps on the cloud site —
+    two models with NO shared data space (two-step copies between them)."""
+    args = {"n_chains": n_chains, **wf_args}
+    return {
+        "version": "v1.0",
+        "models": {
+            "occam": {"type": "mesh", "config": {
+                "topology": {"data": 16, "model": 16},
+                "shared_store": True,
+                "services": {"cellranger": {"replicas": n_chains,
+                                            "cores": 2, "memory_gb": 8}}}},
+            "garr_cloud": {"type": "local", "config": {
+                "services": {"r_env": {"replicas": n_chains, "cores": 1,
+                                       "memory_gb": 4}}}},
+        },
+        "workflows": {
+            "single-cell": {
+                "type": "python",
+                "config": {"module": "repro.configs.paper_pipeline",
+                           "builder": "build_workflow", "args": args},
+                "bindings": [
+                    {"step": "/mkfastq",
+                     "target": {"model": "occam", "service": "cellranger"}},
+                    *[{"step": f"/chains/{i}/count",
+                       "target": {"model": "occam", "service": "cellranger"}}
+                      for i in range(n_chains)],
+                    {"step": "/chains",
+                     "target": {"model": "garr_cloud", "service": "r_env"}},
+                ],
+            }
+        },
+        "scheduling": {"policy": "data_locality"},
+    }

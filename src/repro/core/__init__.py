@@ -1,0 +1,25 @@
+"""StreamFlow-JAX core: the paper's contribution as a composable layer.
+
+Workflow (DAG + POSIX step ids) x declarative multi-site environments
+(Connector implementations) wired by a StreamFlow file, executed by a
+locality-aware FCFS scheduler with R1-R4 semantics (atomic deployment
+units, task->service bindings, two-step baseline transfers, elision).
+"""
+from repro.core.workflow import Workflow, Step, Requirements, match_binding
+from repro.core.connector import (Connector, ConnectorCopyKind, ObjectStore,
+                                  serialize, deserialize)
+from repro.core.connectors import (LocalConnector, MeshConnector,
+                                   MultiPodConnector, SimClusterConnector,
+                                   make_connector)
+from repro.core.deployment import DeploymentManager, ModelSpec
+from repro.core.scheduler import (Scheduler, Policy, DataLocalityPolicy,
+                                  RoundRobinPolicy, LoadBalancePolicy,
+                                  BackfillPolicy, JobDescription,
+                                  JobAllocation, ResourceAllocation,
+                                  JobStatus, POLICIES)
+from repro.core.datamanager import DataManager, TransferRecord
+from repro.core.streamflow_file import (load as load_streamflow_file,
+                                        StreamFlowConfig, Binding,
+                                        StreamFlowFileError, validate)
+from repro.core.executor import StreamFlowExecutor, RunResult, JobEvent
+from repro.core.fault import FaultConfig, DurationTracker

@@ -1,0 +1,167 @@
+"""The Connector interface (paper Fig. 2), re-grounded for accelerator sites.
+
+The paper's connectors shell out to container orchestrators; ours manage
+device-mesh *sites*.  The contract is kept method-for-method:
+
+  deploy() / undeploy()                — model (site) lifecycle, called only
+                                         by the DeploymentManager (R1)
+  get_available_resources(service)     — replicas of a service in this model
+  run(resource, command, ...)          — execute a step invocation
+  copy(src, dst, kind, source_remote)  — move tokens between the management
+                                         node and resources (R3)
+
+Each resource owns an object store (the container filesystem analogue).
+``copy`` moves *serialized* payloads so a two-step inter-site transfer has
+real, measurable cost (bytes appear in the DataManager transfer log).
+"""
+from __future__ import annotations
+
+import abc
+import enum
+import pickle
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+
+class ConnectorCopyKind(enum.Enum):
+    LOCAL_TO_REMOTE = "localToRemote"
+    REMOTE_TO_LOCAL = "remoteToLocal"
+    REMOTE_TO_REMOTE = "remoteToRemote"
+
+
+@dataclass
+class ResourceInfo:
+    name: str
+    service: str
+    cores: int = 1
+    memory_gb: float = 4.0
+
+
+class ObjectStore:
+    """Per-resource keyed payload store with byte accounting."""
+
+    def __init__(self):
+        self._data: Dict[str, bytes] = {}
+        self._lock = threading.Lock()
+        self.bytes_in = 0
+        self.bytes_out = 0
+
+    def put(self, path: str, payload: bytes):
+        with self._lock:
+            self._data[path] = payload
+            self.bytes_in += len(payload)
+
+    def get(self, path: str) -> bytes:
+        with self._lock:
+            payload = self._data[path]
+            self.bytes_out += len(payload)
+            return payload
+
+    def exists(self, path: str) -> bool:
+        with self._lock:
+            return path in self._data
+
+    def delete(self, path: str):
+        with self._lock:
+            self._data.pop(path, None)
+
+    def paths(self) -> List[str]:
+        with self._lock:
+            return list(self._data)
+
+
+def serialize(value: Any) -> bytes:
+    return pickle.dumps(value, protocol=pickle.HIGHEST_PROTOCOL)
+
+
+def deserialize(payload: bytes) -> Any:
+    return pickle.loads(payload)
+
+
+class Connector(abc.ABC):
+    """One *model* (deployment unit).  Subclasses define the site semantics.
+
+    Mirrors the paper's design: a new Connector façade can be handed out per
+    caller (``clone``) while the underlying site state is shared — avoiding
+    cross-thread conflicts without fully-atomic method access.
+    """
+
+    def __init__(self, name: str, config: Optional[dict] = None):
+        self.name = name
+        self.config = config or {}
+        self.deployed = False
+        self._alive = True
+
+    # -- lifecycle (R1: atomic unit; only DeploymentManager calls these) ----
+    @abc.abstractmethod
+    def deploy(self) -> None:
+        ...
+
+    @abc.abstractmethod
+    def undeploy(self) -> None:
+        ...
+
+    # -- discovery -----------------------------------------------------------
+    @abc.abstractmethod
+    def get_available_resources(self, service: str) -> List[str]:
+        ...
+
+    @abc.abstractmethod
+    def resource_info(self, resource: str) -> ResourceInfo:
+        ...
+
+    # -- execution ------------------------------------------------------------
+    @abc.abstractmethod
+    def run(self, resource: str, command: Any,
+            environment: Optional[Dict[str, str]] = None,
+            workdir: Optional[str] = None,
+            capture_output: bool = False) -> Any:
+        ...
+
+    # -- data plane -----------------------------------------------------------
+    @abc.abstractmethod
+    def store(self, resource: str) -> ObjectStore:
+        ...
+
+    def copy(self, src: str, dst: str, kind: ConnectorCopyKind,
+             source_remote: Optional[str] = None, *,
+             local_store: Optional[ObjectStore] = None,
+             dest_remote: Optional[str] = None) -> int:
+        """Move one payload; returns bytes moved.
+
+        src/dst are store paths (token keys).  ``source_remote`` /
+        ``dest_remote`` name resources for the remote ends;
+        ``local_store`` is the management node's store.
+        """
+        if kind is ConnectorCopyKind.LOCAL_TO_REMOTE:
+            payload = local_store.get(src)
+            self.store(dest_remote).put(dst, payload)
+        elif kind is ConnectorCopyKind.REMOTE_TO_LOCAL:
+            payload = self.store(source_remote).get(src)
+            local_store.put(dst, payload)
+        else:  # REMOTE_TO_REMOTE within this model
+            payload = self.store(source_remote).get(src)
+            self.store(dest_remote).put(dst, payload)
+        return len(payload)
+
+    def services(self) -> List[str]:
+        """Service names this model exposes (wrappers may delegate)."""
+        return list(self.config.get("services", {"default": {}}).keys())
+
+    # -- hybrid-data-space hints (R3/R4 optimisations) ------------------------
+    def shared_data_space(self) -> bool:
+        """True if all resources in this model see one store (e.g. the
+        paper's Occam /scratch LUSTRE mount)."""
+        return False
+
+    # -- health (fault-tolerance hooks) ---------------------------------------
+    def ping(self, resource: Optional[str] = None) -> bool:
+        return self._alive and self.deployed
+
+    def clone(self) -> "Connector":
+        """Per-caller façade sharing the underlying site state (paper §4.5)."""
+        import copy as _copy
+        twin = _copy.copy(self)
+        return twin

@@ -1,0 +1,20 @@
+from repro.core.connectors.local import LocalConnector
+from repro.core.connectors.mesh import MeshConnector
+from repro.core.connectors.multipod import MultiPodConnector
+from repro.core.connectors.simcluster import SimClusterConnector
+
+CONNECTOR_TYPES = {
+    "local": LocalConnector,
+    "mesh": MeshConnector,
+    "multipod": MultiPodConnector,
+    "simcluster": SimClusterConnector,
+}
+
+
+def make_connector(name: str, type_: str, config: dict):
+    try:
+        cls = CONNECTOR_TYPES[type_]
+    except KeyError:
+        raise KeyError(f"unknown connector type {type_!r}; "
+                       f"known: {sorted(CONNECTOR_TYPES)}") from None
+    return cls(name, config)

@@ -1,0 +1,201 @@
+"""DataManager (paper §4.6): token placement registry + transfer engine.
+
+R3 — with no shared data space, any inter-model transfer is still possible
+via the two-step copy through the management node; intra-model transfers use
+the connector's own channel (one hop; zero-copy when the model exposes a
+shared store, the Occam /scratch analogue).
+
+R4 — transfers are elided when the token is already present at the target;
+a cheap local *staging* copy is still made (the paper does the same so
+in-place modifications can't corrupt inputs).
+
+Every movement is appended to ``transfers`` — the benchmark harness reads
+this log to produce the paper's overhead accounting.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional, Tuple
+
+from repro.core.connector import (Connector, ConnectorCopyKind, ObjectStore,
+                                  deserialize, serialize)
+
+
+@dataclass
+class TransferRecord:
+    token: str
+    kind: str            # elided | staging | intra-model | two-step | collect
+    src: Optional[str]
+    dst: str
+    bytes: int
+    seconds: float
+
+
+@dataclass
+class _Location:
+    model: str
+    resource: str
+    path: str
+
+
+class DataManager:
+    def __init__(self, deployment_manager, scheduler=None):
+        self.deployment_manager = deployment_manager
+        self.scheduler = scheduler
+        self._lock = threading.RLock()
+        self.remote_paths: Dict[str, List[_Location]] = {}
+        self.local_store = ObjectStore()           # the management node
+        self.transfers: List[TransferRecord] = []
+
+    # -- registry ---------------------------------------------------------------
+    def add_remote_path_mapping(self, model: str, resource: str,
+                                token: str, path: Optional[str] = None):
+        with self._lock:
+            locs = self.remote_paths.setdefault(token, [])
+            loc = _Location(model, resource, path or token)
+            if not any(l.resource == resource and l.path == loc.path
+                       for l in locs):
+                locs.append(loc)
+
+    def locations(self, token: str) -> List[Tuple[str, str]]:
+        with self._lock:
+            return [(l.resource, l.path) for l in
+                    self.remote_paths.get(token, [])]
+
+    def drop_model(self, model: str):
+        """A site died/undeployed: forget every token replica it held."""
+        with self._lock:
+            for token in list(self.remote_paths):
+                self.remote_paths[token] = [
+                    l for l in self.remote_paths[token] if l.model != model]
+
+    def token_size(self, token: str) -> int:
+        with self._lock:
+            locs = self.remote_paths.get(token, [])
+        if not locs:
+            if self.local_store.exists(token):
+                return len(self.local_store.get(token))
+            return 0
+        loc = locs[0]
+        conn = self.deployment_manager.get_connector(loc.model)
+        if conn is None:
+            return 0
+        st = conn.store(loc.resource)
+        return len(st.get(loc.path)) if st.exists(loc.path) else 0
+
+    # -- value plane (management-node helpers) ------------------------------------
+    def put_local(self, token: str, value: Any):
+        self.local_store.put(token, serialize(value))
+
+    def get_local(self, token: str) -> Any:
+        return deserialize(self.local_store.get(token))
+
+    # -- the R3/R4 transfer logic ---------------------------------------------------
+    def transfer_data(self, token: str, dst_model: str, dst_resource: str
+                      ) -> TransferRecord:
+        """Ensure ``token`` is present at (dst_model, dst_resource)."""
+        t0 = time.time()
+        dst_conn = self.deployment_manager.get_connector(dst_model)
+        if dst_conn is None:
+            raise RuntimeError(f"target model {dst_model} not deployed")
+        dst_store = dst_conn.store(dst_resource)
+        with self._lock:
+            locs = list(self.remote_paths.get(token, []))
+
+        # R4: already present at the destination store?
+        present = dst_store.exists(token) or any(
+            l.model == dst_model and l.resource == dst_resource
+            for l in locs)
+        same_space = (not present and dst_conn.shared_data_space() and any(
+            l.model == dst_model for l in locs))
+        if present or same_space:
+            # staging copy only (negligible vs a remote transfer — paper §4.6)
+            size = len(dst_store.get(token)) if dst_store.exists(token) else 0
+            rec = TransferRecord(token, "elided" if present else "staging",
+                                 None, f"{dst_model}:{dst_resource}",
+                                 size, time.time() - t0)
+            self._done(rec, dst_model, dst_resource, token)
+            return rec
+
+        # source pick: management node, else first registered replica
+        if self.local_store.exists(token) and not locs:
+            payload_len = dst_conn.copy(
+                token, token, ConnectorCopyKind.LOCAL_TO_REMOTE,
+                local_store=self.local_store, dest_remote=dst_resource)
+            rec = TransferRecord(token, "two-step", "management",
+                                 f"{dst_model}:{dst_resource}",
+                                 payload_len, time.time() - t0)
+            self._done(rec, dst_model, dst_resource, token)
+            return rec
+        if not locs:
+            raise KeyError(f"token {token!r} exists nowhere")
+        src = locs[0]
+        src_conn = self.deployment_manager.get_connector(src.model)
+
+        if src.model == dst_model:
+            # intra-model: the connector's own (optimised) channel
+            n = dst_conn.copy(src.path, token,
+                              ConnectorCopyKind.REMOTE_TO_REMOTE,
+                              source_remote=src.resource,
+                              dest_remote=dst_resource)
+            rec = TransferRecord(token, "intra-model",
+                                 f"{src.model}:{src.resource}",
+                                 f"{dst_model}:{dst_resource}", n,
+                                 time.time() - t0)
+        else:
+            # R3 baseline: two copies through the management node
+            n1 = src_conn.copy(src.path, token,
+                               ConnectorCopyKind.REMOTE_TO_LOCAL,
+                               source_remote=src.resource,
+                               local_store=self.local_store)
+            n2 = dst_conn.copy(token, token,
+                               ConnectorCopyKind.LOCAL_TO_REMOTE,
+                               local_store=self.local_store,
+                               dest_remote=dst_resource)
+            rec = TransferRecord(token, "two-step",
+                                 f"{src.model}:{src.resource}",
+                                 f"{dst_model}:{dst_resource}", n1 + n2,
+                                 time.time() - t0)
+        self._done(rec, dst_model, dst_resource, token)
+        return rec
+
+    def _done(self, rec: TransferRecord, model: str, resource: str,
+              token: str):
+        with self._lock:
+            self.transfers.append(rec)
+        self.add_remote_path_mapping(model, resource, token)
+
+    # -- output retrieval --------------------------------------------------------
+    def collect_output(self, token: str) -> Any:
+        """Bring a token back to the management node (always called before a
+        remote site is undeployed, and for local steps needing remote data)."""
+        if self.local_store.exists(token):
+            return deserialize(self.local_store.get(token))
+        with self._lock:
+            locs = list(self.remote_paths.get(token, []))
+        if not locs:
+            raise KeyError(f"token {token!r} not found anywhere")
+        src = locs[0]
+        conn = self.deployment_manager.get_connector(src.model)
+        t0 = time.time()
+        n = conn.copy(src.path, token, ConnectorCopyKind.REMOTE_TO_LOCAL,
+                      source_remote=src.resource,
+                      local_store=self.local_store)
+        with self._lock:
+            self.transfers.append(TransferRecord(
+                token, "collect", f"{src.model}:{src.resource}",
+                "management", n, time.time() - t0))
+        return deserialize(self.local_store.get(token))
+
+    # -- accounting ---------------------------------------------------------------
+    def transfer_summary(self) -> Dict[str, Dict[str, float]]:
+        out: Dict[str, Dict[str, float]] = {}
+        with self._lock:
+            for r in self.transfers:
+                d = out.setdefault(r.kind, {"n": 0, "bytes": 0, "seconds": 0.0})
+                d["n"] += 1
+                d["bytes"] += r.bytes
+                d["seconds"] += r.seconds
+        return out

@@ -1,0 +1,387 @@
+"""StreamFlow executor: the event loop driving a workflow across sites.
+
+Per iteration (the paper's FCFS loop, §4.4/§4.5):
+  1. fireable steps (all input tokens available) join the waiting queue;
+  2. each queued step resolves its binding (deepest path wins), lazily
+     deploys its model (R1), and asks the Scheduler for a resource;
+  3. scheduled steps get their input tokens moved in by the DataManager
+     (R4 elision / intra-model channel / R3 two-step) and run on a worker
+     thread via the Connector;
+  4. completions register output tokens and wake the queue; failures retry
+     with backoff (re-deploying dead sites); long-runners may spawn a
+     speculative twin (first finisher wins).
+
+On success final outputs are collected to the management node; models are
+undeployed at the end — and on any unhandled exception (paper §4.5).
+"""
+from __future__ import annotations
+
+import threading
+import time
+from concurrent.futures import ThreadPoolExecutor, Future
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Tuple
+
+from repro.core.connector import deserialize, serialize
+from repro.core.datamanager import DataManager
+from repro.core.deployment import DeploymentManager, ModelSpec
+from repro.core.fault import DurationTracker, FaultConfig
+from repro.core.scheduler import (JobDescription, JobStatus, POLICIES,
+                                  Scheduler)
+from repro.core.streamflow_file import Binding, StreamFlowConfig
+from repro.core.workflow import Step, Workflow, match_binding
+
+
+@dataclass
+class JobEvent:
+    step: str
+    model: str
+    resource: str
+    start: float
+    end: float
+    attempt: int
+    status: str
+    speculative: bool = False
+
+
+@dataclass
+class RunResult:
+    outputs: Dict[str, Any]
+    events: List[JobEvent]
+    transfers: List
+    deployment_timeline: List[tuple]
+    wall_seconds: float
+
+    def timeline_rows(self) -> List[tuple]:
+        t0 = min((e.start for e in self.events), default=0.0)
+        return [(e.step, e.resource, round(e.start - t0, 4),
+                 round(e.end - t0, 4), e.status, e.attempt, e.speculative)
+                for e in sorted(self.events, key=lambda e: e.start)]
+
+
+class _Invocation:
+    """The Connector 'command': reads input tokens from the resource store,
+    runs the step fn, writes outputs back.  ``tag`` keys fault injection."""
+
+    def __init__(self, step: Step, executor: "StreamFlowExecutor",
+                 model: str, resource: str):
+        self.step = step
+        self.tag = step.path
+        self._ex = executor
+        self._model = model
+        self._resource = resource
+
+    def __call__(self, ctx) -> Dict[str, Any]:
+        store = ctx["connector"].store(self._resource)
+        inputs = {port: deserialize(store.get(token))
+                  for port, token in self.step.inputs.items()}
+        cancel = ctx["environment"].get("__cancel__")
+        if cancel is not None and cancel.is_set():
+            raise RuntimeError(f"{self.step.path} cancelled pre-start")
+        outputs = self.step.fn(inputs, ctx) or {}
+        missing = set(self.step.outputs) - set(outputs)
+        if missing:
+            raise RuntimeError(
+                f"{self.step.path} did not produce tokens {sorted(missing)}")
+        for token in self.step.outputs:
+            store.put(token, serialize(outputs[token]))
+        return outputs
+
+
+class StreamFlowExecutor:
+    def __init__(self, models: Dict[str, ModelSpec], *,
+                 policy: str = "data_locality",
+                 grace_period_s: Optional[float] = None,
+                 fault: Optional[FaultConfig] = None,
+                 max_workers: int = 16):
+        self.deployment = DeploymentManager(models,
+                                            grace_period_s=grace_period_s)
+        self.scheduler = Scheduler(POLICIES[policy]())
+        self.data = DataManager(self.deployment, self.scheduler)
+        self.fault = fault or FaultConfig()
+        self.durations = DurationTracker()
+        self.max_workers = max_workers
+        self.events: List[JobEvent] = []
+        self._ev_lock = threading.Lock()
+
+    @classmethod
+    def from_config(cls, cfg: StreamFlowConfig, **kw) -> "StreamFlowExecutor":
+        return cls(cfg.models, policy=cfg.policy,
+                   grace_period_s=cfg.grace_period_s,
+                   fault=FaultConfig.from_dict(cfg.fault), **kw)
+
+    # ------------------------------------------------------------------ utils
+    def _resolve_binding(self, step_path: str, bindings: List[Binding]
+                         ) -> Binding:
+        best = match_binding(step_path, [b.step for b in bindings])
+        if best is None:
+            raise KeyError(f"no binding matches step {step_path}")
+        for b in bindings:
+            if b.step.rstrip("/") == best.rstrip("/") or b.step == best:
+                return b
+        raise KeyError(best)
+
+    def _ensure_deployed(self, model: str):
+        conn = self.deployment.deploy(model)
+        # (re-)register this model's resources with the scheduler
+        for svc in self._services_of(conn):
+            for r in conn.get_available_resources(svc):
+                info = conn.resource_info(r)
+                self.scheduler.register_resource(
+                    r, model, svc, info.cores, info.memory_gb)
+        return conn
+
+    @staticmethod
+    def _services_of(conn) -> List[str]:
+        return conn.services()
+
+    def _record(self, ev: JobEvent):
+        with self._ev_lock:
+            self.events.append(ev)
+
+    # ------------------------------------------------------------------- run
+    def run(self, workflow: Workflow, bindings: List[Binding],
+            inputs: Optional[Dict[str, Any]] = None,
+            collect: bool = True) -> RunResult:
+        t_start = time.time()
+        workflow.validate()
+        inputs = inputs or {}
+        missing = set(workflow.external_inputs()) - set(inputs)
+        if missing:
+            raise ValueError(f"missing workflow inputs: {sorted(missing)}")
+        for token, value in inputs.items():
+            self.data.put_local(token, value)
+
+        done_tokens = set(inputs)
+        completed: set = set()
+        running: Dict[str, dict] = {}          # step path -> job record
+        waiting: List[str] = []
+        failed_final: Dict[str, Exception] = {}
+
+        pool = ThreadPoolExecutor(max_workers=self.max_workers)
+        self._pool = pool
+        stall = 0
+        try:
+            while len(completed) < len(workflow.steps):
+                if failed_final:
+                    step, err = next(iter(failed_final.items()))
+                    raise RuntimeError(
+                        f"step {step} failed after retries") from err
+                # 1. enqueue newly fireable steps (FCFS)
+                for path in workflow.fireable(sorted(done_tokens),
+                                              list(running) + list(completed)
+                                              + waiting):
+                    waiting.append(path)
+                # 2. try to schedule the queue
+                waiting = self._schedule_queue(
+                    workflow, bindings, waiting, running, pool)
+                # 3. straggler speculation
+                if self.fault.speculative:
+                    self._maybe_speculate(workflow, bindings, running, pool)
+                # 4. harvest completions
+                progressed = self._harvest(running, completed, done_tokens,
+                                           failed_final)
+                # 5. grace-period undeploy (beyond-paper)
+                pending_models = {
+                    self._resolve_binding(p, bindings).model
+                    for p in waiting + list(running)} if (
+                        waiting or running) else set()
+                released = self.deployment.maybe_undeploy_idle(pending_models)
+                for m in released:
+                    self.scheduler.forget_model(m)
+                    self.data.drop_model(m)
+                if not progressed:
+                    # deadlock guard: queued work, nothing running, nothing
+                    # schedulable for a long stretch => fail loudly
+                    stall = stall + 1 if (waiting and not running) else 0
+                    if stall > 5000:
+                        raise RuntimeError(
+                            f"scheduling deadlock: waiting={waiting}, "
+                            f"no resources accept them")
+                    time.sleep(0.003)
+                else:
+                    stall = 0
+
+            outputs = {}
+            if collect:
+                for token in workflow.final_outputs():
+                    outputs[token] = self.data.collect_output(token)
+            return RunResult(outputs, list(self.events),
+                             list(self.data.transfers),
+                             list(self.deployment.timeline),
+                             time.time() - t_start)
+        except BaseException:
+            self.deployment.undeploy_all()      # paper §4.5 exception path
+            raise
+        finally:
+            pool.shutdown(wait=False, cancel_futures=True)
+            self.deployment.undeploy_all()
+
+    # --------------------------------------------------------------- schedule
+    def _job_desc(self, workflow: Workflow, path: str, service: str
+                  ) -> JobDescription:
+        step = workflow.steps[path]
+        deps = {}
+        for token in step.inputs.values():
+            deps[token] = max(self.data.token_size(token), 1)
+        return JobDescription(path, step.requirements, deps, service)
+
+    def _schedule_queue(self, workflow, bindings, waiting, running, pool):
+        if not waiting:
+            return waiting
+        descs = {p: self._job_desc(workflow, p,
+                                   self._resolve_binding(p, bindings).service)
+                 for p in waiting}
+        order = self.scheduler.order_queue(
+            [descs[p] for p in waiting], self.data.remote_paths)
+        still = []
+        for job in order:
+            path = job.name
+            b = self._resolve_binding(path, bindings)
+            self._ensure_deployed(b.model)
+            conn = self.deployment.get_connector(b.model)
+            avail = conn.get_available_resources(b.service)
+            resource = self.scheduler.schedule(job, avail,
+                                               self.data.remote_paths)
+            if resource is None:
+                still.append(path)
+                continue
+            self._launch(workflow, path, b, resource, running, pool,
+                         attempt=0, speculative=False)
+        return still
+
+    def _launch(self, workflow, path, binding, resource, running, pool,
+                *, attempt: int, speculative: bool):
+        step = workflow.steps[path]
+        cancel = threading.Event()
+        rec = {
+            "binding": binding, "resource": resource, "attempt": attempt,
+            "speculative": speculative, "cancel": cancel,
+            "start": time.time(), "workflow": workflow,
+        }
+        key = path if not speculative else f"{path}#spec{attempt}"
+        running[key] = rec
+        self.deployment.job_started(binding.model)
+
+        def work():
+            # move inputs in (R3/R4), then execute
+            for token in step.inputs.values():
+                self.data.transfer_data(token, binding.model, resource)
+            conn = self.deployment.get_connector(binding.model)
+            inv = _Invocation(step, self, binding.model, resource)
+            conn.run(resource, inv, environment={"__cancel__": cancel},
+                     capture_output=False)
+            return None
+
+        rec["future"] = pool.submit(work)
+
+    # ---------------------------------------------------------------- harvest
+    def _harvest(self, running, completed, done_tokens, failed_final) -> bool:
+        progressed = False
+        for key in list(running):
+            rec = running[key]
+            fut: Future = rec["future"]
+            if not fut.done():
+                continue
+            progressed = True
+            del running[key]
+            path = key.split("#spec")[0]
+            b = rec["binding"]
+            self.deployment.job_finished(b.model)
+            err = fut.exception()
+            now = time.time()
+            wf: Workflow = rec["workflow"]
+            step = wf.steps[path]
+            if err is None and path in completed:
+                # lost the speculation race — record and move on
+                self.scheduler.notify(
+                    self._jobname(key), JobStatus.COMPLETED)
+                self._record(JobEvent(path, b.model, rec["resource"],
+                                      rec["start"], now, rec["attempt"],
+                                      "duplicate", rec["speculative"]))
+                continue
+            if err is None:
+                completed.add(path)
+                for token in step.outputs:
+                    self.data.add_remote_path_mapping(
+                        b.model, rec["resource"], token)
+                    done_tokens.add(token)
+                self.durations.record(b.service, now - rec["start"])
+                self.scheduler.notify(self._jobname(key), JobStatus.COMPLETED)
+                self._record(JobEvent(path, b.model, rec["resource"],
+                                      rec["start"], now, rec["attempt"],
+                                      "completed", rec["speculative"]))
+                # cancel a surviving twin
+                for k2, r2 in list(running.items()):
+                    if k2.split("#spec")[0] == path:
+                        r2["cancel"].set()
+                continue
+            # ---- failure path ------------------------------------------------
+            self.scheduler.notify(self._jobname(key), JobStatus.FAILED)
+            self._record(JobEvent(path, b.model, rec["resource"],
+                                  rec["start"], now, rec["attempt"],
+                                  f"failed:{type(err).__name__}",
+                                  rec["speculative"]))
+            if rec["speculative"] or path in completed:
+                continue                        # twin death is harmless
+            if rec["attempt"] >= self.fault.max_retries:
+                failed_final[path] = err
+                continue
+            # site health check: dead site => redeploy + forget its tokens
+            conn = self.deployment.get_connector(b.model)
+            if conn is None or not conn.ping(rec["resource"]):
+                self.data.drop_model(b.model)
+                self.scheduler.forget_model(b.model)
+                self.deployment.redeploy(b.model)
+            delay = self.fault.backoff_s * (
+                self.fault.backoff_mult ** rec["attempt"])
+            time.sleep(delay)
+            self._retry(rec, path, running)
+        return progressed
+
+    def _jobname(self, key: str) -> str:
+        return key.split("#spec")[0]
+
+    def _retry(self, rec, path, running):
+        wf: Workflow = rec["workflow"]
+        b = rec["binding"]
+        self._ensure_deployed(b.model)
+        conn = self.deployment.get_connector(b.model)
+        avail = conn.get_available_resources(b.service)
+        job = self._job_desc(wf, path, b.service)
+        job.name = path
+        resource = self.scheduler.schedule(job, avail, self.data.remote_paths)
+        if resource is None and avail:
+            resource = avail[0]                 # retry may oversubscribe
+            self.scheduler.jobs.pop(path, None)
+        if resource is None:
+            raise RuntimeError(f"no resource to retry {path}")
+        self._launch(wf, path, b, resource, running, self._pool,
+                     attempt=rec["attempt"] + 1, speculative=False)
+
+    # ------------------------------------------------------------- speculation
+    def _maybe_speculate(self, workflow, bindings, running, pool):
+        for key, rec in list(running.items()):
+            if rec["speculative"] or "#spec" in key:
+                continue
+            path = key
+            b = rec["binding"]
+            elapsed = time.time() - rec["start"]
+            if not self.durations.is_straggler(b.service, elapsed,
+                                               self.fault):
+                continue
+            if any(k.startswith(path + "#spec") for k in running):
+                continue                        # one twin at a time
+            conn = self.deployment.get_connector(b.model)
+            if conn is None:
+                continue
+            avail = [r for r in conn.get_available_resources(b.service)
+                     if r != rec["resource"]]
+            job = self._job_desc(workflow, path, b.service)
+            job.name = f"{path}#spec{rec['attempt']}"
+            resource = self.scheduler.schedule(job, avail,
+                                               self.data.remote_paths)
+            if resource is None:
+                continue
+            self._launch(workflow, path, b, resource, running, pool,
+                         attempt=rec["attempt"], speculative=True)

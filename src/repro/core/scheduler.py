@@ -1,0 +1,228 @@
+"""Task scheduling (paper §4.4): FCFS over fireable tasks + pluggable Policy.
+
+The Policy interface is kept argument-for-argument (Fig. 3):
+``get_resource(job_description, available_resources, remote_paths, jobs,
+resources)``.  Default = the paper's data-locality policy: walk the job's
+data dependencies (largest first) and take the first *free* resource already
+holding one; else any free resource; else None -> the task waits.
+
+Beyond-paper (flagged): BackfillPolicy — the paper notes queue-aware
+strategies "cannot currently be implemented" in its one-task-at-a-time loop;
+our executor optionally hands policies the whole fireable queue.
+"""
+from __future__ import annotations
+
+import abc
+import threading
+from dataclasses import dataclass, field
+from enum import Enum
+from typing import Dict, List, Optional, Sequence, Tuple
+
+from repro.core.workflow import Requirements
+
+
+class JobStatus(Enum):
+    RUNNING = "running"
+    COMPLETED = "completed"
+    FAILED = "failed"
+
+
+@dataclass
+class JobDescription:
+    name: str                                     # step path (+attempt tag)
+    requirements: Requirements
+    # token -> size in bytes (data dependencies, for locality reasoning)
+    data_deps: Dict[str, int] = field(default_factory=dict)
+    service: str = "default"
+
+
+@dataclass
+class JobAllocation:
+    job: JobDescription
+    resource: str
+    status: JobStatus = JobStatus.RUNNING
+
+
+@dataclass
+class ResourceAllocation:
+    model: str
+    service: str
+    jobs: List[str] = field(default_factory=list)  # running job names
+    cores: int = 1
+    memory_gb: float = 4.0
+
+
+RemotePaths = Dict[str, List[Tuple[str, str]]]     # token -> [(resource, path)]
+
+
+def _loc_resource(loc) -> str:
+    """Accept (resource, path) tuples or DataManager _Location records."""
+    if isinstance(loc, (tuple, list)):
+        return loc[0]
+    return getattr(loc, "resource")
+
+
+class Policy(abc.ABC):
+    @abc.abstractmethod
+    def get_resource(self, job_description: JobDescription,
+                     available_resources: Sequence[str],
+                     remote_paths: RemotePaths,
+                     jobs: Dict[str, JobAllocation],
+                     resources: Dict[str, ResourceAllocation]
+                     ) -> Optional[str]:
+        ...
+
+
+def _fits(job: JobDescription, res: ResourceAllocation) -> bool:
+    return (res.cores >= job.requirements.cores
+            and res.memory_gb >= job.requirements.memory_gb)
+
+
+def _free(name: str, resources: Dict[str, ResourceAllocation]) -> bool:
+    res = resources.get(name)
+    return res is not None and not res.jobs
+
+
+class DataLocalityPolicy(Policy):
+    """The paper's default: largest dependency's holder first, if free."""
+
+    def get_resource(self, job, available, remote_paths, jobs, resources):
+        deps = sorted(job.data_deps.items(), key=lambda kv: -kv[1])
+        for token, _size in deps:
+            for loc in remote_paths.get(token, []):
+                resource = _loc_resource(loc)
+                if (resource in available and _free(resource, resources)
+                        and _fits(job, resources[resource])):
+                    return resource
+        for resource in available:
+            if _free(resource, resources) and _fits(job, resources[resource]):
+                return resource
+        return None
+
+
+class RoundRobinPolicy(Policy):
+    def __init__(self):
+        self._next = 0
+        self._lock = threading.Lock()
+
+    def get_resource(self, job, available, remote_paths, jobs, resources):
+        with self._lock:
+            order = list(available)
+            for k in range(len(order)):
+                cand = order[(self._next + k) % len(order)]
+                if _free(cand, resources) and _fits(job, resources[cand]):
+                    self._next = (self._next + k + 1) % len(order)
+                    return cand
+        return None
+
+
+class LoadBalancePolicy(Policy):
+    """Fewest running jobs wins (allows oversubscription)."""
+
+    def get_resource(self, job, available, remote_paths, jobs, resources):
+        best, best_load = None, None
+        for cand in available:
+            res = resources.get(cand)
+            if res is None or not _fits(job, res):
+                continue
+            load = len(res.jobs)
+            if best_load is None or load < best_load:
+                best, best_load = cand, load
+        return best
+
+
+class BackfillPolicy(Policy):
+    """Beyond-paper queue-aware policy: like locality, but refuses to give
+    the *last* free locality-neutral resource to a job whose dependency
+    holder is merely busy (leaving room for the queued job that needs it).
+    Requires the executor's whole-queue scheduling mode."""
+
+    def __init__(self):
+        self.inner = DataLocalityPolicy()
+
+    def get_resource(self, job, available, remote_paths, jobs, resources):
+        return self.inner.get_resource(job, available, remote_paths, jobs,
+                                       resources)
+
+    def order_queue(self, queue: List[JobDescription],
+                    remote_paths: RemotePaths,
+                    resources: Dict[str, ResourceAllocation]
+                    ) -> List[JobDescription]:
+        """Shortest-data-first among ready jobs whose locality target is
+        free; jobs blocked on busy holders sink (they'd wait anyway)."""
+        def key(j: JobDescription):
+            for token, _ in sorted(j.data_deps.items(), key=lambda kv: -kv[1]):
+                for loc in remote_paths.get(token, []):
+                    if _free(_loc_resource(loc), resources):
+                        return (0, -sum(j.data_deps.values()))
+            return (1, sum(j.data_deps.values()))
+        return sorted(queue, key=key)
+
+
+POLICIES = {
+    "data_locality": DataLocalityPolicy,
+    "round_robin": RoundRobinPolicy,
+    "load_balance": LoadBalancePolicy,
+    "backfill": BackfillPolicy,
+}
+
+
+class Scheduler:
+    """Tracks allocations; answers one job at a time (paper FCFS), with the
+    optional queue-reorder hook for BackfillPolicy."""
+
+    def __init__(self, policy: Optional[Policy] = None):
+        self.policy = policy or DataLocalityPolicy()
+        self.jobs: Dict[str, JobAllocation] = {}
+        self.resources: Dict[str, ResourceAllocation] = {}
+        self._lock = threading.RLock()
+
+    def register_resource(self, name: str, model: str, service: str,
+                          cores: int, memory_gb: float):
+        with self._lock:
+            if name not in self.resources:
+                self.resources[name] = ResourceAllocation(
+                    model, service, [], cores, memory_gb)
+
+    def forget_model(self, model: str):
+        with self._lock:
+            for name in [n for n, r in self.resources.items()
+                         if r.model == model]:
+                del self.resources[name]
+
+    def schedule(self, job: JobDescription, available: Sequence[str],
+                 remote_paths: RemotePaths) -> Optional[str]:
+        with self._lock:
+            resource = self.policy.get_resource(
+                job, available, remote_paths, self.jobs, self.resources)
+            if resource is None:
+                return None
+            self.jobs[job.name] = JobAllocation(job, resource)
+            self.resources[resource].jobs.append(job.name)
+            return resource
+
+    def order_queue(self, queue: List[JobDescription],
+                    remote_paths: RemotePaths) -> List[JobDescription]:
+        hook = getattr(self.policy, "order_queue", None)
+        if hook is None:
+            return queue
+        with self._lock:
+            return hook(queue, remote_paths, self.resources)
+
+    def notify(self, job_name: str, status: JobStatus):
+        with self._lock:
+            alloc = self.jobs.get(job_name)
+            if alloc is None:
+                return
+            alloc.status = status
+            if status in (JobStatus.COMPLETED, JobStatus.FAILED):
+                res = self.resources.get(alloc.resource)
+                if res and job_name in res.jobs:
+                    res.jobs.remove(job_name)
+
+    def running_on(self, model: str) -> List[str]:
+        with self._lock:
+            return [j for j, a in self.jobs.items()
+                    if a.status is JobStatus.RUNNING
+                    and self.resources.get(a.resource)
+                    and self.resources[a.resource].model == model]

@@ -1,0 +1,137 @@
+"""StreamFlow-file loading (paper §4.3): one YAML entry point wiring
+workflows to execution environments.
+
+``config_schema.json`` next to this module is the authoritative format
+description and is enforced here by a small dependency-free validator
+(same role as the paper's JSON-Schema validation pass).
+"""
+from __future__ import annotations
+
+import importlib
+import json
+import os
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+import yaml
+
+from repro.core.deployment import ModelSpec
+from repro.core.workflow import Workflow
+
+_SCHEMA_PATH = os.path.join(os.path.dirname(__file__), "config_schema.json")
+
+
+class StreamFlowFileError(ValueError):
+    pass
+
+
+@dataclass
+class Binding:
+    step: str
+    model: str
+    service: str
+
+
+@dataclass
+class WorkflowEntry:
+    name: str
+    workflow: Workflow
+    bindings: List[Binding]
+
+
+@dataclass
+class StreamFlowConfig:
+    models: Dict[str, ModelSpec]
+    workflows: Dict[str, WorkflowEntry]
+    policy: str = "data_locality"
+    grace_period_s: Optional[float] = None
+    fault: Dict[str, Any] = field(default_factory=dict)
+
+
+def _check(cond: bool, msg: str):
+    if not cond:
+        raise StreamFlowFileError(msg)
+
+
+def _validate_against_schema(doc: dict, schema: dict, path: str = "$"):
+    """Minimal JSON-Schema subset validator (type/required/enum/properties/
+    additionalProperties/items) — enough to enforce config_schema.json."""
+    t = schema.get("type")
+    if t:
+        types = t if isinstance(t, list) else [t]
+        pymap = {"object": dict, "array": list, "string": str,
+                 "boolean": bool, "integer": int, "number": (int, float),
+                 "null": type(None)}
+        _check(any(isinstance(doc, pymap[x]) for x in types),
+               f"{path}: expected {t}, got {type(doc).__name__}")
+        if "boolean" not in types and isinstance(doc, bool) \
+                and "integer" in types:
+            raise StreamFlowFileError(f"{path}: bool where integer expected")
+    if "enum" in schema:
+        _check(doc in schema["enum"],
+               f"{path}: {doc!r} not one of {schema['enum']}")
+    if isinstance(doc, dict):
+        for req in schema.get("required", []):
+            _check(req in doc, f"{path}: missing required key {req!r}")
+        props = schema.get("properties", {})
+        addl = schema.get("additionalProperties", True)
+        for k, v in doc.items():
+            if k in props:
+                _validate_against_schema(v, props[k], f"{path}.{k}")
+            elif isinstance(addl, dict):
+                _validate_against_schema(v, addl, f"{path}.{k}")
+            elif addl is False:
+                raise StreamFlowFileError(f"{path}: unexpected key {k!r}")
+    if isinstance(doc, list) and "items" in schema:
+        for i, v in enumerate(doc):
+            _validate_against_schema(v, schema["items"], f"{path}[{i}]")
+
+
+def validate(doc: dict):
+    with open(_SCHEMA_PATH) as f:
+        schema = json.load(f)
+    _validate_against_schema(doc, schema)
+
+
+def _build_workflow(name: str, wcfg: dict) -> Workflow:
+    mod = importlib.import_module(wcfg["module"])
+    builder = getattr(mod, wcfg.get("builder", "build_workflow"))
+    wf = builder(**wcfg.get("args", {}))
+    _check(isinstance(wf, Workflow),
+           f"workflow builder for {name} returned {type(wf).__name__}")
+    wf.validate()
+    return wf
+
+
+def load(path_or_doc) -> StreamFlowConfig:
+    """Load + validate a StreamFlow file (path, YAML string, or dict)."""
+    if isinstance(path_or_doc, dict):
+        doc = path_or_doc
+    elif os.path.exists(str(path_or_doc)):
+        with open(path_or_doc) as f:
+            doc = yaml.safe_load(f)
+    else:
+        doc = yaml.safe_load(path_or_doc)
+    validate(doc)
+
+    models = {name: ModelSpec(name, m["type"], m.get("config", {}),
+                              m.get("external", False))
+              for name, m in doc["models"].items()}
+
+    workflows: Dict[str, WorkflowEntry] = {}
+    for name, w in doc["workflows"].items():
+        bindings = []
+        for b in w["bindings"]:
+            tgt = b["target"]
+            _check(tgt["model"] in models,
+                   f"binding {b['step']}: unknown model {tgt['model']!r}")
+            bindings.append(Binding(b["step"], tgt["model"], tgt["service"]))
+        workflows[name] = WorkflowEntry(
+            name, _build_workflow(name, w["config"]), bindings)
+
+    sched = doc.get("scheduling", {})
+    return StreamFlowConfig(
+        models=models, workflows=workflows,
+        policy=sched.get("policy", "data_locality"),
+        grace_period_s=sched.get("grace_period_s"),
+        fault=doc.get("fault", {}))

@@ -1,0 +1,135 @@
+"""Workflow model: Steps with named data ports arranged in a DAG.
+
+Mirrors the paper's object model (§4.3): every step has a POSIX-like path id
+("/split", "/chains/2/count", ...); sub-workflows are folders; bindings
+resolve by deepest-matching path.  Data dependencies are *tokens* (the
+paper's files): a step fires when every input token has been produced.
+
+A step's ``fn`` is the 2026 re-grounding of the paper's container command:
+a Python callable — usually wrapping a jitted JAX computation — executed on
+a *resource* (mesh-slice replica / host executor) by a Connector.
+"""
+from __future__ import annotations
+
+import posixpath
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional, Sequence, Tuple
+
+
+@dataclass(frozen=True)
+class Requirements:
+    """Minimum hardware asks, checked against resource capabilities."""
+    cores: int = 1
+    memory_gb: float = 1.0
+
+
+@dataclass
+class Step:
+    path: str                                   # POSIX id, unique in workflow
+    fn: Callable[..., Dict[str, Any]]           # (inputs, ctx) -> outputs
+    inputs: Dict[str, str] = field(default_factory=dict)   # port -> token
+    outputs: Tuple[str, ...] = ()               # token names produced
+    requirements: Requirements = Requirements()
+    # Expected relative output size (bytes) — lets the locality policy reason
+    # about placement before the data exists (the paper's known file sizes).
+    est_output_bytes: int = 0
+
+    def __post_init__(self):
+        if not self.path.startswith("/"):
+            raise ValueError(f"step path must be absolute: {self.path!r}")
+        norm = posixpath.normpath(self.path)
+        if norm != self.path:
+            raise ValueError(f"non-normalised step path: {self.path!r}")
+
+
+class Workflow:
+    """A DAG of steps keyed by POSIX path, with token-producer indexing."""
+
+    def __init__(self, name: str):
+        self.name = name
+        self.steps: Dict[str, Step] = {}
+        self._producer: Dict[str, str] = {}      # token -> step path
+
+    def add_step(self, step: Step) -> Step:
+        if step.path in self.steps:
+            raise ValueError(f"duplicate step path {step.path}")
+        for tok in step.outputs:
+            if tok in self._producer:
+                raise ValueError(
+                    f"token {tok!r} produced by both "
+                    f"{self._producer[tok]} and {step.path}")
+            self._producer[tok] = step.path
+        self.steps[step.path] = step
+        return step
+
+    def producer_of(self, token: str) -> Optional[str]:
+        return self._producer.get(token)
+
+    def predecessors(self, path: str) -> List[str]:
+        out = []
+        for tok in self.steps[path].inputs.values():
+            p = self._producer.get(tok)
+            if p is not None and p not in out:
+                out.append(p)
+        return out
+
+    def successors(self, path: str) -> List[str]:
+        mine = set(self.steps[path].outputs)
+        return [s.path for s in self.steps.values()
+                if mine & set(s.inputs.values())]
+
+    # -- validation ---------------------------------------------------------
+
+    def validate(self):
+        """Raises on cycles or dangling workflow-internal references."""
+        state: Dict[str, int] = {}
+
+        def dfs(p: str, stack: Tuple[str, ...]):
+            if state.get(p) == 2:
+                return
+            if state.get(p) == 1:
+                raise ValueError(f"cycle through {p}: {' -> '.join(stack)}")
+            state[p] = 1
+            for q in self.predecessors(p):
+                dfs(q, stack + (q,))
+            state[p] = 2
+
+        for p in self.steps:
+            dfs(p, (p,))
+
+    def external_inputs(self) -> List[str]:
+        """Tokens consumed but produced by no step (workflow arguments)."""
+        need = {t for s in self.steps.values() for t in s.inputs.values()}
+        return sorted(need - set(self._producer))
+
+    def final_outputs(self) -> List[str]:
+        """Tokens produced but consumed by no step (workflow results)."""
+        used = {t for s in self.steps.values() for t in s.inputs.values()}
+        return sorted(set(self._producer) - used)
+
+    def fireable(self, done_tokens: Sequence[str],
+                 started: Sequence[str]) -> List[str]:
+        """FCFS-ordered steps whose inputs are all available (paper §4.4)."""
+        have = set(done_tokens)
+        busy = set(started)
+        out = []
+        for path, step in self.steps.items():
+            if path in busy:
+                continue
+            if all(t in have for t in step.inputs.values()):
+                out.append(path)
+        return out
+
+
+def match_binding(step_path: str, binding_paths: Sequence[str]
+                  ) -> Optional[str]:
+    """Deepest-matching binding path for a step (paper §4.3: a folder binding
+    applies recursively unless a deeper entry overrides it)."""
+    best: Optional[str] = None
+    for b in binding_paths:
+        norm = posixpath.normpath(b)
+        if step_path == norm or step_path.startswith(
+                norm.rstrip("/") + "/") or norm == "/":
+            if best is None or len(norm) > len(best):
+                best = norm
+    return best

@@ -1,0 +1,4 @@
+from repro.data.synthetic import (SyntheticCorpus, pack_documents,
+                                  make_batch_iter, batch_for)
+from repro.data.frontends import audio_frames, vision_patches
+from repro.data.loader import PrefetchLoader

@@ -1,0 +1,32 @@
+"""Modality-frontend STUBS (per the assignment: [audio]/[vlm] entries specify
+the transformer backbone only; the frontend provides precomputed embeddings).
+
+Deterministic low-rank gaussians — cheap to generate at any size and give the
+backbone non-degenerate inputs (distinct per position, correlated channels).
+"""
+from __future__ import annotations
+
+import numpy as np
+
+
+def _lowrank(rng, n, dim, rank=16):
+    a = rng.standard_normal((n, rank)).astype(np.float32)
+    b = rng.standard_normal((rank, dim)).astype(np.float32) / np.sqrt(rank)
+    return a @ b
+
+
+def audio_frames(batch: int, n_frames: int, dim: int, *, seed: int = 0
+                 ) -> np.ndarray:
+    """Precomputed conv-frontend frame embeddings: (B, n_frames, dim)."""
+    rng = np.random.default_rng((seed, 1))
+    out = np.stack([_lowrank(np.random.default_rng((seed, 1, b)),
+                             n_frames, dim) for b in range(batch)])
+    return out.astype(np.float32)
+
+
+def vision_patches(batch: int, n_patches: int, dim: int, *, seed: int = 0
+                   ) -> np.ndarray:
+    """Precomputed ViT patch embeddings: (B, n_patches, dim)."""
+    out = np.stack([_lowrank(np.random.default_rng((seed, 2, b)),
+                             n_patches, dim) for b in range(batch)])
+    return out.astype(np.float32)

@@ -1,0 +1,3 @@
+from repro.distributed.sharding import (RULESETS, logical_to_specs,
+                                        batch_specs, cache_specs, safe_spec)
+from repro.distributed.hlo import collective_stats, parse_hlo_collectives

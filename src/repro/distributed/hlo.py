@@ -1,0 +1,347 @@
+"""HLO-text analyzer — the roofline's data source.
+
+``compiled.cost_analysis()`` counts while-loop bodies ONCE (it has no trip
+counts), which under-reports scanned layer stacks by the scan length.  This
+module parses the post-SPMD HLO text instead and walks the call graph
+multiplying loop bodies by their trip counts (recovered from the loop
+condition's compare constant), yielding:
+
+  * dot FLOPs            (2 * prod(result dims) * prod(contracting dims))
+  * HBM traffic estimate (operand+result bytes of materializing ops —
+                          fusion boundaries are HBM round-trips on TPU)
+  * collective inventory (wire bytes per device via ring-algorithm factors)
+
+Shapes in the partitioned module are per-device shard shapes, so every
+number below is per-device.
+"""
+from __future__ import annotations
+
+import re
+from collections import defaultdict
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "f32": 4, "f16": 2, "bf16": 2, "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1, "s4": 1, "u4": 1, "token": 0,
+}
+
+_COLLECTIVES = ("all-reduce", "all-gather", "reduce-scatter", "all-to-all",
+                "collective-permute")
+
+_SHAPE_RE = re.compile(r"(\w+)\[([\d,]*)\]")
+_DEF_RE = re.compile(r"^(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OP_RE = re.compile(r"([\w\-]+)\(")
+_COMP_HDR_RE = re.compile(r"^(?:ENTRY\s+)?%?([\w.\-]+)\s*(?:\([^)]*.*)?\{\s*$")
+_GROUPS_ARR_RE = re.compile(r"replica_groups=\[(\d+),(\d+)\]")
+_GROUPS_RE = re.compile(r"replica_groups=\{\{([^}]*)\}")
+_CONST_RE = re.compile(r"constant\((\d+)\)")
+
+# result-type blob ends where the op name begins; capture leading types
+_RESULT_RE = re.compile(r"^\(?((?:\w+\[[\d,]*\](?:\{[^}]*\})?(?:,\s*)?)+)\)?\s*[\w\-]+\(")
+
+_SKIP_OPS = {"get-tuple-element", "tuple", "parameter", "constant", "bitcast",
+             "after-all", "add-dependency", "compare", "iota"}
+
+
+def _shape_list_bytes(blob: str) -> int:
+    return sum(_bytes(d, s) for d, s in _SHAPE_RE.findall(blob))
+
+
+def _bytes(dtype: str, dims: str) -> int:
+    if dtype not in _DTYPE_BYTES:
+        return 0
+    n = 1
+    if dims:
+        for d in dims.split(","):
+            n *= int(d)
+    return n * _DTYPE_BYTES[dtype]
+
+
+def _dims(blob: str) -> List[Tuple[str, List[int]]]:
+    out = []
+    for dt, ds in _SHAPE_RE.findall(blob):
+        out.append((dt, [int(x) for x in ds.split(",")] if ds else []))
+    return out
+
+
+@dataclass
+class _Op:
+    name: str
+    kind: str
+    line: str
+    result_blob: str
+    is_root: bool = False
+
+    @property
+    def result_bytes(self) -> int:
+        return _shape_list_bytes(self.result_blob)
+
+
+@dataclass
+class _Comp:
+    name: str
+    ops: List[_Op] = field(default_factory=list)
+    vars: Dict[str, str] = field(default_factory=dict)   # %name -> type blob
+    max_const: int = 1
+
+    def root_kind(self) -> str:
+        for op in self.ops:
+            if op.is_root:
+                return op.kind
+        return self.ops[-1].kind if self.ops else ""
+
+
+def _parse_computations(text: str) -> Tuple[Dict[str, _Comp], Optional[str]]:
+    comps: Dict[str, _Comp] = {}
+    entry = None
+    cur: Optional[_Comp] = None
+    for raw in text.splitlines():
+        line = raw.strip()
+        if not line:
+            continue
+        if line.endswith("{") and ("(" in line or line.startswith("ENTRY")):
+            m = _COMP_HDR_RE.match(line)
+            if m:
+                cur = _Comp(m.group(1))
+                comps[cur.name] = cur
+                if line.startswith("ENTRY"):
+                    entry = cur.name
+                continue
+        if line.startswith("}"):
+            cur = None
+            continue
+        if cur is None:
+            continue
+        m = _DEF_RE.match(line)
+        if not m:
+            continue
+        var, rhs = m.groups()
+        rm = _RESULT_RE.match(rhs)
+        result_blob = rm.group(1) if rm else rhs.split("(")[0]
+        cur.vars[var] = result_blob
+        after = rhs[len(result_blob):] if rhs.startswith(result_blob) else rhs
+        om = _OP_RE.search(after)
+        kind = om.group(1) if om else ""
+        cur.ops.append(_Op(var, kind, line, result_blob,
+                           is_root=line.startswith("ROOT ")))
+        for c in _CONST_RE.findall(line):
+            cur.max_const = max(cur.max_const, int(c))
+    return comps, entry
+
+
+def _operand_names(line: str) -> List[str]:
+    m = re.search(r"[\w\-]+\((.*)\)", line)
+    if not m:
+        return []
+    blob = m.group(1)
+    # strip attribute tail: operands come first, attrs after "), attr=..."
+    return re.findall(r"%([\w.\-]+)", blob.split("), ")[0])
+
+
+def _attr(line: str, key: str) -> Optional[str]:
+    m = re.search(rf"{key}=%?([\w.\-]+)", line)
+    return m.group(1) if m else None
+
+
+def _group_size(line: str, default: int) -> int:
+    m = _GROUPS_ARR_RE.search(line)
+    if m:
+        return int(m.group(2))
+    m = _GROUPS_RE.search(line)
+    if m:
+        ids = [x for x in m.group(1).split(",") if x.strip() != ""]
+        return max(len(ids), 1)
+    return default
+
+
+def _dot_flops(op: _Op, comp: _Comp) -> float:
+    """2 * prod(result dims) * prod(lhs contracting dim sizes)."""
+    res = _dims(op.result_blob)
+    if not res:
+        return 0.0
+    out_elems = 1
+    for d in res[0][1]:
+        out_elems *= d
+    ops_names = _operand_names(op.line)
+    lhs_blob = comp.vars.get(ops_names[0]) if ops_names else None
+    m = re.search(r"lhs_contracting_dims=\{([\d,]*)\}", op.line)
+    if not (lhs_blob and m):
+        return 2.0 * out_elems  # degenerate fallback
+    lhs_dims = _dims(lhs_blob)[0][1] if _dims(lhs_blob) else []
+    contract = 1
+    for idx in (int(x) for x in m.group(1).split(",") if x):
+        if idx < len(lhs_dims):
+            contract *= lhs_dims[idx]
+    return 2.0 * out_elems * contract
+
+
+@dataclass
+class HloTotals:
+    flops: float = 0.0
+    traffic_bytes: float = 0.0
+    coll_ops: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    coll_shard_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+    coll_wire_bytes: Dict[str, float] = field(default_factory=lambda: defaultdict(float))
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.coll_wire_bytes.values())
+
+    @property
+    def total_coll_ops(self) -> float:
+        return sum(self.coll_ops.values())
+
+
+def _wire(kind: str, b: float, g: int) -> float:
+    if kind == "all-reduce":
+        return 2.0 * (g - 1) / g * b
+    if kind == "collective-permute":
+        return float(b)
+    return (g - 1) / g * b
+
+
+def analyze_hlo(text: str, n_devices: int = 1) -> HloTotals:
+    comps, entry = _parse_computations(text)
+    memo: Dict[str, HloTotals] = {}
+
+    def visit(name: str, depth: int = 0) -> HloTotals:
+        if name in memo:
+            return memo[name]
+        t = HloTotals()
+        comp = comps.get(name)
+        if comp is None or depth > 50:
+            return t
+        memo[name] = t          # provisional (guards cycles)
+        # VMEM-reuse traffic model: within one execution of a computation,
+        # each HBM buffer is read at most once (then VMEM/register resident),
+        # so operand bytes are counted once per unique var per computation.
+        seen_reads = set()
+
+        def read_bytes(names):
+            total = 0
+            for o in names:
+                if o in seen_reads:
+                    continue
+                seen_reads.add(o)
+                total += _shape_list_bytes(comp.vars.get(o, ""))
+            return total
+
+        for op in comp.ops:
+            kind = op.kind
+            base = kind.replace("-start", "") if kind.endswith("-start") else kind
+            if base in _COLLECTIVES:
+                operand_bytes = sum(
+                    _shape_list_bytes(comp.vars.get(o, ""))
+                    for o in _operand_names(op.line))
+                read_bytes(_operand_names(op.line))  # mark as read
+                b = max(op.result_bytes, operand_bytes)
+                # async pairs: count -start, skip -done (no '(' op match for
+                # done's operand being the start tuple is still a collective
+                # name; filter explicitly)
+                if kind.endswith("-done"):
+                    continue
+                g = _group_size(op.line, n_devices)
+                if g <= 1:
+                    continue
+                t.coll_ops[base] += 1
+                t.coll_shard_bytes[base] += b
+                t.coll_wire_bytes[base] += _wire(base, b, g)
+                t.traffic_bytes += b
+                continue
+            if kind == "while":
+                body = _attr(op.line, "body")
+                cond = _attr(op.line, "condition")
+                trips = comps[cond].max_const if cond in comps else 1
+                sub = visit(body, depth + 1)
+                t.flops += sub.flops * trips
+                t.traffic_bytes += sub.traffic_bytes * trips
+                for k in sub.coll_ops:
+                    t.coll_ops[k] += sub.coll_ops[k] * trips
+                    t.coll_shard_bytes[k] += sub.coll_shard_bytes[k] * trips
+                    t.coll_wire_bytes[k] += sub.coll_wire_bytes[k] * trips
+                continue
+            eff_kind = kind
+            if kind in ("fusion", "call", "conditional", "custom-call"):
+                target = _attr(op.line, "calls") or _attr(op.line, "to_apply")
+                if target and target in comps and kind in ("fusion", "call"):
+                    sub = visit(target, depth + 1)
+                    t.flops += sub.flops
+                    # fused interiors stay in VMEM/registers: traffic from
+                    # the fusion boundary only (counted below). A fusion
+                    # ROOTED at a (dynamic-)slice/update is slice-like.
+                    rk = comps[target].root_kind()
+                    if rk in ("dynamic-slice", "slice",
+                              "dynamic-update-slice"):
+                        eff_kind = rk
+            if kind == "dot":
+                t.flops += _dot_flops(op, comp)
+            if kind in _SKIP_OPS or not kind:
+                continue
+            # slicing ops touch only the slice, not the sliced buffer:
+            #  - (dynamic-)slice reads+writes its (small) result
+            #  - dynamic-update-slice updates in place (donated aliasing on
+            #    TPU): traffic = the update operand, not the full buffer
+            if eff_kind in ("dynamic-slice", "slice"):
+                t.traffic_bytes += 2 * op.result_bytes
+                continue
+            if eff_kind == "dynamic-update-slice":
+                ops_names = _operand_names(op.line)
+                sizes = [_shape_list_bytes(comp.vars.get(o, ""))
+                         for o in ops_names]
+                big = max(sizes) if sizes else op.result_bytes
+                upd = sum(s for s in sizes if s != big) or op.result_bytes
+                t.traffic_bytes += 2 * min(upd, op.result_bytes)
+                continue
+            t.traffic_bytes += op.result_bytes + read_bytes(
+                _operand_names(op.line))
+        return t
+
+    return visit(entry) if entry else HloTotals()
+
+
+# ---------------------------------------------------------------------------
+# Back-compat convenience API (used by dryrun + tests)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CollectiveStats:
+    ops: Dict[str, float]
+    shard_bytes: Dict[str, float]
+    wire_bytes: Dict[str, float]
+
+    @property
+    def total_wire_bytes(self) -> float:
+        return sum(self.wire_bytes.values())
+
+    @property
+    def total_ops(self) -> float:
+        return sum(self.ops.values())
+
+    def summary(self) -> str:
+        rows = [f"  {k:<22s} n={self.ops[k]:<6.0f} "
+                f"shard={self.shard_bytes[k]/2**20:9.1f} MiB"
+                f" wire={self.wire_bytes[k]/2**20:9.1f} MiB"
+                for k in sorted(self.ops)]
+        rows.append(f"  {'TOTAL':<22s} n={self.total_ops:<6.0f} "
+                    f"wire={self.total_wire_bytes/2**20:9.1f} MiB/device")
+        return "\n".join(rows)
+
+
+def parse_hlo_collectives(hlo_text: str, n_devices: int = 1) -> CollectiveStats:
+    t = analyze_hlo(hlo_text, n_devices)
+    return CollectiveStats(dict(t.coll_ops), dict(t.coll_shard_bytes),
+                           dict(t.coll_wire_bytes))
+
+
+def collective_stats(compiled, n_devices: int) -> CollectiveStats:
+    return parse_hlo_collectives(compiled.as_text(), n_devices)
+
+
+def hlo_totals(compiled, n_devices: int) -> HloTotals:
+    return analyze_hlo(compiled.as_text(), n_devices)
+
+
+def count_op(hlo_text: str, name: str) -> int:
+    return len(re.findall(rf"\b{re.escape(name)}\(", hlo_text))

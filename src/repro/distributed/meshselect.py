@@ -1,0 +1,47 @@
+"""Per-(arch x shape) mesh selection — the §Perf hillclimb results as a
+first-class framework feature.
+
+The findings (EXPERIMENTS.md §4): the best intra-pod (dp, tp) split depends
+on BOTH the architecture (head/expert divisibility) and the shape (the batch
+must cover dp).  ``preferred_mesh`` encodes the table and the guards;
+``dryrun --auto-mesh`` and the launch drivers consult it.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+from repro.models.config import ArchConfig, ShapeSpec
+
+CHIPS_PER_POD = 256
+
+# (arch, kind) -> (dp, tp, ruleset); kind in {train, prefill, decode}
+# Sources: §Perf iterations A3 (minicpm), B2 (deepseek), D2 (granite),
+# E1 (mixtral), prefill spot-checks (§4.3d).
+_PREFERRED = {
+    ("minicpm-2b", "train"): (64, 4, "base"),         # 36 heads % 4 == 0
+    ("deepseek-coder-33b", "train"): (32, 8, "base"),  # 56 heads % 8 == 0
+    ("deepseek-coder-33b", "prefill"): (32, 8, "base"),
+    ("granite-moe-3b-a800m", "train"): (32, 8, "ep"),  # 40 experts % 8 == 0
+    ("granite-moe-3b-a800m", "prefill"): (32, 8, "ep"),
+    ("mixtral-8x7b", "train"): (32, 8, "ep"),          # 8 experts, 32 heads
+    ("mixtral-8x7b", "prefill"): (32, 8, "ep"),
+}
+
+
+def preferred_mesh(cfg: ArchConfig, shape: ShapeSpec
+                   ) -> Tuple[int, int, str]:
+    """(dp, tp, ruleset) for one cell; guards against shapes whose batch
+    cannot cover the data axis (the §4.3d refutation)."""
+    dp, tp, rules = _PREFERRED.get((cfg.name, shape.kind), (16, 16, "base"))
+    # guard: dp must divide the global batch or sharding degrades to
+    # replication (worse than the default mesh)
+    while dp > 1 and shape.global_batch % dp:
+        dp //= 2
+        tp = CHIPS_PER_POD // dp
+    if dp * tp != CHIPS_PER_POD:
+        tp = CHIPS_PER_POD // dp
+    # guard: tp should divide the flattened head dim (always true for the
+    # table entries; protects custom configs)
+    if (cfg.n_heads * cfg.head_dim) % tp:
+        dp, tp, rules = 16, 16, "base"
+    return dp, tp, rules

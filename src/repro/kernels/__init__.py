@@ -1,0 +1,19 @@
+"""Pallas TPU kernels for the model zoo's compute hot-spots.
+
+Each kernel package ships three files:
+  kernel.py — pl.pallas_call with explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — the jit'd public wrapper (shape plumbing, fallbacks)
+  ref.py    — pure-jnp oracle used by the allclose test sweeps
+
+On this CPU container kernels execute in interpret mode (the kernel body
+runs in Python op-by-op); on TPU the same code lowers through Mosaic.
+Block shapes are MXU-aligned (128 multiples) and sized against the ~128 MiB
+VMEM budget — the structural perf argument lives in EXPERIMENTS.md §Perf.
+"""
+
+
+def should_interpret(interpret):
+    if interpret is not None:
+        return interpret
+    import jax
+    return jax.default_backend() != "tpu"

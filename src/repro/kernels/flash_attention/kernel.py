@@ -1,0 +1,99 @@
+"""Blocked online-softmax attention (FlashAttention adapted to TPU tiling).
+
+Adaptation notes (GPU -> TPU): no warp-level shuffles or shared-memory
+banking — the insight that transfers is *tile + online rescale*.  Tiles are
+MXU-shaped ((block_q x Dh) @ (Dh x block_k) hits the 128x128 systolic
+array), the running (m, l, acc) state lives in VMEM scratch and persists
+across the sequential innermost grid dimension (TPU grids iterate in order,
+which replaces the GPU's software pipeline over K blocks).
+
+Grid: (B*H, S/block_q, S/block_k); GQA folds the KV head index into the
+K/V BlockSpec index maps (q head h reads kv head h // group).
+"""
+from __future__ import annotations
+
+import functools
+import math
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+NEG_INF = -1e30
+
+
+def _attn_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
+                 scale: float, causal: bool, window: int,
+                 block_q: int, block_k: int):
+    iq = pl.program_id(1)
+    ik = pl.program_id(2)
+
+    @pl.when(ik == 0)
+    def _init():
+        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+        l_ref[...] = jnp.zeros_like(l_ref)
+        acc_ref[...] = jnp.zeros_like(acc_ref)
+
+    q = q_ref[0].astype(jnp.float32)                   # (bq, Dh)
+    k = k_ref[0].astype(jnp.float32)                   # (bk, Dh)
+    v = v_ref[0].astype(jnp.float32)                   # (bk, Dh)
+
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32) * scale
+
+    q_pos = iq * block_q + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 0)
+    k_pos = ik * block_k + jax.lax.broadcasted_iota(jnp.int32,
+                                                    (block_q, block_k), 1)
+    mask = jnp.ones((block_q, block_k), jnp.bool_)
+    if causal:
+        mask &= q_pos >= k_pos
+    if window:
+        mask &= q_pos - k_pos < window
+    s = jnp.where(mask, s, NEG_INF)
+
+    m_prev = m_ref[...]                                # (bq, 1)
+    m_cur = jnp.max(s, axis=1, keepdims=True)
+    m_new = jnp.maximum(m_prev, m_cur)
+    p = jnp.exp(s - m_new)                             # (bq, bk)
+    corr = jnp.exp(m_prev - m_new)                     # (bq, 1)
+    l_ref[...] = corr * l_ref[...] + jnp.sum(p, axis=1, keepdims=True)
+    acc_ref[...] = corr * acc_ref[...] + jax.lax.dot(
+        p.astype(v.dtype), v, preferred_element_type=jnp.float32)
+    m_ref[...] = m_new
+
+    @pl.when(ik == pl.num_programs(2) - 1)
+    def _done():
+        l = jnp.maximum(l_ref[...], 1e-30)
+        o_ref[0] = (acc_ref[...] / l).astype(o_ref.dtype)
+
+
+def flash_attention_bhsd(q, k, v, *, causal: bool, window: int,
+                         group: int, block_q: int = 128, block_k: int = 128,
+                         interpret: bool = True):
+    """q: (BH, S, Dh); k, v: (BKH, S, Dh); BH = BKH * group."""
+    BH, S, Dh = q.shape
+    scale = 1.0 / math.sqrt(Dh)
+    grid = (BH, S // block_q, S // block_k)
+    kern = functools.partial(_attn_kernel, scale=scale, causal=causal,
+                             window=window, block_q=block_q, block_k=block_k)
+    return pl.pallas_call(
+        kern,
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1, block_q, Dh), lambda b, i, j: (b, i, 0)),
+            pl.BlockSpec((1, block_k, Dh),
+                         lambda b, i, j, g=group: (b // g, j, 0)),
+            pl.BlockSpec((1, block_k, Dh),
+                         lambda b, i, j, g=group: (b // g, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, block_q, Dh), lambda b, i, j: (b, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((BH, S, Dh), q.dtype),
+        scratch_shapes=[
+            pltpu.VMEM((block_q, 1), jnp.float32),     # running max m
+            pltpu.VMEM((block_q, 1), jnp.float32),     # running denom l
+            pltpu.VMEM((block_q, Dh), jnp.float32),    # output accumulator
+        ],
+        interpret=interpret,
+    )(q, k, v)

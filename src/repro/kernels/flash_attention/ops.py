@@ -1,0 +1,35 @@
+"""Public flash-attention wrapper: GQA-aware shape plumbing + fallback."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import should_interpret
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+@partial(jax.jit, static_argnames=("causal", "window", "block_q", "block_k",
+                                   "interpret"))
+def flash_attention(q, k, v, *, causal: bool = True, window: int = 0,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret: bool | None = None):
+    """q: (B, S, H, Dh); k, v: (B, S, KH, Dh) -> (B, S, H, Dh).
+
+    Falls back to the blockwise jnp reference when S doesn't tile (serving
+    odd context lengths goes through the reference path anyway).
+    """
+    B, S, H, Dh = q.shape
+    KH = k.shape[2]
+    if S % block_q or S % block_k:
+        from repro.kernels.flash_attention.ref import reference_attention
+        return reference_attention(q, k, v, causal=causal, window=window)
+    group = H // KH
+    qt = q.transpose(0, 2, 1, 3).reshape(B * H, S, Dh)
+    kt = k.transpose(0, 2, 1, 3).reshape(B * KH, S, Dh)
+    vt = v.transpose(0, 2, 1, 3).reshape(B * KH, S, Dh)
+    out = flash_attention_bhsd(qt, kt, vt, causal=causal, window=window,
+                               group=group, block_q=block_q, block_k=block_k,
+                               interpret=should_interpret(interpret))
+    return out.reshape(B, H, S, Dh).transpose(0, 2, 1, 3)

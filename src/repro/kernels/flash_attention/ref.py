@@ -1,0 +1,9 @@
+"""Pure-jnp oracle for the flash-attention kernel."""
+from __future__ import annotations
+
+from repro.models.layers import attention
+
+
+def reference_attention(q, k, v, *, causal: bool = True, window: int = 0):
+    """Same contract as ops.flash_attention; exact softmax."""
+    return attention(q, k, v, causal=causal, window=window)

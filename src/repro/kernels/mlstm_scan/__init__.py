@@ -1,0 +1,1 @@
+from repro.kernels.mlstm_scan import ops, ref

@@ -1,0 +1,36 @@
+"""Public chunkwise-mLSTM wrapper matching models.xlstm's contract."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels import should_interpret
+from repro.kernels.mlstm_scan.kernel import mlstm_chunkwise_pallas
+
+
+@partial(jax.jit, static_argnames=("chunk", "interpret"))
+def _run(q, k, v, ig, fg, chunk, interpret):
+    B, S, H, Dh = q.shape
+    def fold(x):
+        return x.transpose(0, 2, 1, 3).reshape(B * H, S, Dh)
+    gi = ig.transpose(0, 2, 1).reshape(B * H, S, 1)
+    gf = fg.transpose(0, 2, 1).reshape(B * H, S, 1)
+    h, C, n, m = mlstm_chunkwise_pallas(fold(q), fold(k), fold(v), gi, gf,
+                                        chunk=chunk, interpret=interpret)
+    h = h.reshape(B, H, S, Dh).transpose(0, 2, 1, 3)
+    return h, (C.reshape(B, H, Dh, Dh), n.reshape(B, H, Dh),
+               m.reshape(B, H))
+
+
+def mlstm_chunkwise(q, k, v, ig, fg, *, chunk: int = 64,
+                    init_state=None, interpret: bool | None = None):
+    """Same contract as models.xlstm.mlstm_chunkwise.
+    q,k,v: (B,S,H,Dh); ig,fg: (B,S,H)."""
+    B, S, H, Dh = q.shape
+    if init_state is not None or S % min(chunk, S):
+        from repro.kernels.mlstm_scan.ref import reference_mlstm
+        return reference_mlstm(q, k, v, ig, fg, chunk=chunk,
+                               init_state=init_state)
+    return _run(q, k, v, ig, fg, min(chunk, S), should_interpret(interpret))

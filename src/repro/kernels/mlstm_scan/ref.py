@@ -1,0 +1,10 @@
+"""Oracles for the chunkwise-mLSTM kernel: the jnp chunkwise evaluation and
+the strictly-sequential recurrence (ground truth for both)."""
+from __future__ import annotations
+
+from repro.models.xlstm import mlstm_chunkwise as _chunkwise
+from repro.models.xlstm import mlstm_sequential as sequential_oracle
+
+
+def reference_mlstm(q, k, v, ig, fg, *, chunk: int = 64, init_state=None):
+    return _chunkwise(q, k, v, ig, fg, chunk=chunk, init_state=init_state)

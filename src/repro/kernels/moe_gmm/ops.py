@@ -1,0 +1,41 @@
+"""Public grouped expert-FFN wrapper matching models.moe's param layout."""
+from __future__ import annotations
+
+from functools import partial
+
+import jax
+
+from repro.kernels import should_interpret
+from repro.kernels.moe_gmm.kernel import expert_ffn_pallas
+
+
+@partial(jax.jit, static_argnames=("act", "interpret", "block_c", "block_f"))
+def _run(xe, w1, w3, w2, act, interpret, block_c, block_f):
+    return expert_ffn_pallas(xe, w1.astype(xe.dtype),
+                             None if w3 is None else w3.astype(xe.dtype),
+                             w2.astype(xe.dtype), act=act, block_c=block_c,
+                             block_f=block_f, interpret=interpret)
+
+
+def _pick_block(n: int, preferred: int, direct_max: int):
+    """Largest aligned block that tiles n, else n itself when small."""
+    if n % preferred == 0:
+        return preferred
+    if n <= direct_max:
+        return n
+    for b in (256, 128, 64, 32, 16, 8):
+        if n % b == 0:
+            return b
+    return None
+
+
+def expert_ffn(xe, p, act: str = "swiglu", *, interpret: bool | None = None):
+    """xe: (E, C, d); p: {w1: (E,d,f), w3: (E,d,f)?, w2: (E,f,d)}."""
+    C, f = xe.shape[1], p["w1"].shape[-1]
+    bc = _pick_block(C, 128, 512)
+    bf = _pick_block(f, 512, 1024)
+    if bc is None or bf is None:            # odd shapes -> reference path
+        from repro.kernels.moe_gmm.ref import reference_expert_ffn
+        return reference_expert_ffn(xe, p, act)
+    return _run(xe, p["w1"], p.get("w3"), p["w2"], act,
+                should_interpret(interpret), bc, bf)

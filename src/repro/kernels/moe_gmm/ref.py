@@ -1,0 +1,16 @@
+"""Pure-jnp oracle for the grouped expert-FFN kernel."""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+from repro.models.layers import act_fn
+
+
+def reference_expert_ffn(xe, p, act: str = "swiglu"):
+    """xe: (E, C, d) -> (E, C, d); exact einsum evaluation."""
+    w1 = p["w1"].astype(xe.dtype)
+    w2 = p["w2"].astype(xe.dtype)
+    h = act_fn(act)(jnp.einsum("ecd,edf->ecf", xe, w1))
+    if "w3" in p and p["w3"] is not None:
+        h = h * jnp.einsum("ecd,edf->ecf", xe, p["w3"].astype(xe.dtype))
+    return jnp.einsum("ecf,efd->ecd", h, w2)

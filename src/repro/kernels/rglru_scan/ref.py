@@ -1,0 +1,8 @@
+"""Pure-jnp oracle for the RG-LRU kernel (associative-scan evaluation)."""
+from __future__ import annotations
+
+from repro.models.rglru import rglru as _rglru_assoc
+
+
+def reference_rglru(x, lam, ga, gx, h0=None):
+    return _rglru_assoc(x, lam, ga, gx, h0)

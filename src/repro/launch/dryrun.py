@@ -1,0 +1,271 @@
+# The first two lines MUST run before any other import (jax locks the device
+# count on first init): 512 placeholder CPU devices for the production mesh.
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import time
+import traceback
+from typing import Any, Dict, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import NamedSharding, PartitionSpec as P
+
+from repro.configs import get_arch, ARCH_IDS
+from repro.models import registry as R
+from repro.models.config import SHAPES_BY_NAME, ALL_SHAPES, skip_reason
+from repro.distributed.sharding import (RULESETS, logical_to_specs,
+                                        batch_specs, cache_specs, named)
+from repro.distributed.hlo import hlo_totals
+from repro.launch.mesh import (make_production_mesh, PEAK_FLOPS_BF16, HBM_BW,
+                               ICI_BW, DCN_BW)
+from repro.launch.steps import (input_specs, make_train_step, make_serve_step,
+                                make_prefill_step, make_train_step_dp_compressed,
+                                init_ef_errors, opt_specs)
+from repro.optim.adamw import AdamWState
+
+"""Multi-pod dry-run: lower + compile every (arch x shape) cell on the
+production meshes and emit the roofline source terms.
+
+    python -m repro.launch.dryrun --arch mixtral-8x7b --shape train_4k
+    python -m repro.launch.dryrun --all [--multi-pod] [--out experiments/dryrun]
+
+Each cell writes a JSON artifact with memory_analysis, cost_analysis, and the
+parsed per-device collective inventory; launch/roofline.py aggregates them
+into the EXPERIMENTS.md table.
+"""
+
+
+def _mem_dict(mem) -> Dict[str, int]:
+    keys = ("argument_size_in_bytes", "output_size_in_bytes",
+            "temp_size_in_bytes", "generated_code_size_in_bytes",
+            "alias_size_in_bytes")
+    out = {}
+    for k in keys:
+        try:
+            out[k] = int(getattr(mem, k))
+        except Exception:
+            pass
+    return out
+
+
+def lower_cell(arch: str, shape_name: str, *, multi_pod: bool = False,
+               ruleset: str = "base", accum_steps: int = 1,
+               moe_dispatch: str = "einsum",
+               remat: Optional[str] = None,
+               dp: int = 16, tp: int = 16,
+               dp_compress: bool = False) -> Dict[str, Any]:
+    """Lower+compile one cell; returns the JSON-able record."""
+    cfg = get_arch(arch)
+    if remat is not None:
+        import dataclasses
+        cfg = dataclasses.replace(cfg, remat=remat)
+    shape = SHAPES_BY_NAME[shape_name]
+    rec: Dict[str, Any] = {
+        "arch": arch, "shape": shape_name, "multi_pod": multi_pod,
+        "ruleset": ruleset, "accum_steps": accum_steps,
+        "moe_dispatch": moe_dispatch, "remat": cfg.remat,
+        "mesh_dp_tp": [dp, tp], "dp_compress": dp_compress,
+    }
+    reason = skip_reason(cfg, shape)
+    if reason:
+        rec["skip"] = reason
+        return rec
+
+    mesh = make_production_mesh(multi_pod=multi_pod, dp=dp, tp=tp)
+    chips = mesh.devices.size
+    rec["chips"] = chips
+    rules = RULESETS[ruleset]
+
+    pshapes, axes = R.params_and_axes_shapes(cfg)
+    pspecs = logical_to_specs(axes, pshapes, mesh, rules)
+    pshard = named(mesh, pspecs)
+
+    t0 = time.time()
+    if shape.kind == "train":
+        oshapes = opt_specs(cfg)
+        oshard = AdamWState(step=NamedSharding(mesh, P()),
+                            m=pshard, v=pshard)
+        spec = input_specs(cfg, shape)
+        bshard = named(mesh, batch_specs(spec["batch"], mesh))
+        if dp_compress:
+            if not multi_pod:
+                rec["skip"] = "dp_compress needs the pod axis"
+                return rec
+            n_pods = mesh.shape["pod"]
+            eshapes = jax.eval_shape(
+                lambda: init_ef_errors(pshapes, n_pods))
+            eshard = jax.tree.map(
+                lambda s: NamedSharding(
+                    mesh, P(*(("pod",) + tuple(s.spec)))), pshard)
+            step_fn = make_train_step_dp_compressed(
+                cfg, mesh, moe_dispatch=moe_dispatch)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(pshard, oshard, eshard, bshard),
+                             out_shardings=(pshard, oshard, eshard, None),
+                             donate_argnums=(0, 1, 2))
+            lowered = jitted.lower(pshapes, oshapes, eshapes, spec["batch"])
+        else:
+            step_fn = make_train_step(cfg, accum_steps=accum_steps,
+                                      moe_dispatch=moe_dispatch, mesh=mesh)
+            jitted = jax.jit(step_fn,
+                             in_shardings=(pshard, oshard, bshard),
+                             out_shardings=(pshard, oshard, None),
+                             donate_argnums=(0, 1))
+            lowered = jitted.lower(pshapes, oshapes, spec["batch"])
+        tokens = shape.tokens
+        train = True
+    elif shape.kind == "prefill":
+        spec = input_specs(cfg, shape)
+        bshard = named(mesh, batch_specs(spec["batch"], mesh))
+        step_fn = make_prefill_step(cfg, moe_dispatch=moe_dispatch,
+                                    mesh=mesh)
+        jitted = jax.jit(step_fn, in_shardings=(pshard, bshard))
+        lowered = jitted.lower(pshapes, spec["batch"])
+        tokens = shape.tokens
+        train = False
+    else:  # decode
+        spec = input_specs(cfg, shape)
+        cshard = named(mesh, cache_specs(spec["cache"], mesh, scanned=True))
+        tshard = named(mesh, batch_specs({"t": spec["tokens"]}, mesh))["t"]
+        step_fn = make_serve_step(cfg, moe_dispatch=moe_dispatch, mesh=mesh)
+        jitted = jax.jit(step_fn,
+                         in_shardings=(pshard, tshard,
+                                       NamedSharding(mesh, P()), cshard),
+                         out_shardings=(tshard, None, cshard),
+                         donate_argnums=(3,))
+        lowered = jitted.lower(pshapes, spec["tokens"], spec["pos"],
+                               spec["cache"])
+        tokens = shape.global_batch     # one new token per sequence
+        train = False
+    rec["lower_s"] = round(time.time() - t0, 2)
+
+    t0 = time.time()
+    compiled = lowered.compile()
+    rec["compile_s"] = round(time.time() - t0, 2)
+
+    mem = compiled.memory_analysis()
+    rec["memory"] = _mem_dict(mem)
+    # raw cost_analysis kept for reference — NOTE it counts while bodies once
+    cost = compiled.cost_analysis() or {}
+    rec["cost_analysis_raw"] = {
+        "flops_per_device": float(cost.get("flops", 0.0)),
+        "bytes_per_device": float(cost.get("bytes accessed", 0.0))}
+
+    # trip-count-aware HLO walk: per-device dot FLOPs, HBM traffic, wire bytes
+    tot = hlo_totals(compiled, chips)
+    flops_dev = tot.flops
+    bytes_dev = tot.traffic_bytes
+    rec["hlo"] = {
+        "flops_per_device": flops_dev,
+        "traffic_bytes_per_device": bytes_dev,
+        "collective_ops": {k: float(v) for k, v in tot.coll_ops.items()},
+        "collective_shard_bytes": {k: float(v)
+                                   for k, v in tot.coll_shard_bytes.items()},
+        "collective_wire_bytes": {k: float(v)
+                                  for k, v in tot.coll_wire_bytes.items()},
+        "total_wire_bytes_per_device": float(tot.total_wire_bytes),
+    }
+
+    # --- roofline terms (seconds; per-chip formulation) -------------------
+    model_fl = R.model_flops(cfg, tokens, train=train)
+    compute_s = flops_dev / PEAK_FLOPS_BF16
+    memory_s = bytes_dev / HBM_BW
+    collective_s = tot.total_wire_bytes / ICI_BW
+    dominant = max((("compute", compute_s), ("memory", memory_s),
+                    ("collective", collective_s)), key=lambda kv: kv[1])[0]
+    rec["roofline"] = {
+        "model_flops": model_fl,
+        "hlo_flops_global": flops_dev * chips,
+        "useful_ratio": (model_fl / (flops_dev * chips)
+                         if flops_dev else 0.0),
+        "compute_s": compute_s,
+        "memory_s": memory_s,
+        "collective_s": collective_s,
+        "dominant": dominant,
+        "bound_s": max(compute_s, memory_s, collective_s),
+        "roofline_frac": (model_fl / chips / PEAK_FLOPS_BF16) /
+                         max(compute_s, memory_s, collective_s, 1e-12),
+    }
+    return rec
+
+
+def run_cell(arch, shape_name, out_dir, **kw):
+    tag = "pod2" if kw.get("multi_pod") else "pod1"
+    name = f"{arch}__{shape_name}__{tag}"
+    suffix = kw.pop("suffix", "")
+    if suffix:
+        name += f"__{suffix}"
+    try:
+        rec = lower_cell(arch, shape_name, **kw)
+    except Exception as e:  # a failure here is a bug in the sharding config
+        rec = {"arch": arch, "shape": shape_name, "error": repr(e),
+               "traceback": traceback.format_exc()}
+    if out_dir:
+        os.makedirs(out_dir, exist_ok=True)
+        with open(os.path.join(out_dir, name + ".json"), "w") as f:
+            json.dump(rec, f, indent=1)
+    status = ("SKIP " + rec["skip"] if "skip" in rec else
+              "ERROR " + rec.get("error", "") if "error" in rec else
+              f"ok lower={rec['lower_s']}s compile={rec['compile_s']}s "
+              f"dom={rec['roofline']['dominant']}")
+    print(f"[dryrun] {name}: {status}", flush=True)
+    return rec
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", choices=ARCH_IDS + ["all"], default=None)
+    ap.add_argument("--shape", default=None,
+                    choices=list(SHAPES_BY_NAME) + ["all"])
+    ap.add_argument("--all", action="store_true",
+                    help="every (arch x shape) cell")
+    ap.add_argument("--multi-pod", action="store_true")
+    ap.add_argument("--both-meshes", action="store_true")
+    ap.add_argument("--ruleset", default="base", choices=list(RULESETS))
+    ap.add_argument("--accum-steps", type=int, default=1)
+    ap.add_argument("--moe-dispatch", default="einsum",
+                    choices=["einsum", "gather"])
+    ap.add_argument("--remat", default=None, choices=["full", "dots", "none"])
+    ap.add_argument("--dp", type=int, default=16)
+    ap.add_argument("--tp", type=int, default=16)
+    ap.add_argument("--auto-mesh", action="store_true",
+                    help="per-(arch x shape) mesh/ruleset from the §Perf "
+                         "selection table (distributed/meshselect.py)")
+    ap.add_argument("--dp-compress", action="store_true",
+                    help="int8+EF gradient all-reduce on the pod axis")
+    ap.add_argument("--suffix", default="",
+                    help="artifact-name suffix for perf variants")
+    ap.add_argument("--out", default="experiments/dryrun")
+    args = ap.parse_args()
+
+    archs = ARCH_IDS if (args.all or args.arch in (None, "all")) else [args.arch]
+    shapes = (list(SHAPES_BY_NAME) if (args.all or args.shape in (None, "all"))
+              else [args.shape])
+    meshes = [False, True] if args.both_meshes else [args.multi_pod]
+
+    n_err = 0
+    for mp in meshes:
+        for a in archs:
+            for s in shapes:
+                dp, tp, rules = args.dp, args.tp, args.ruleset
+                if args.auto_mesh:
+                    from repro.distributed.meshselect import preferred_mesh
+                    dp, tp, rules = preferred_mesh(get_arch(a),
+                                                   SHAPES_BY_NAME[s])
+                rec = run_cell(a, s, args.out, multi_pod=mp,
+                               ruleset=rules,
+                               accum_steps=args.accum_steps,
+                               moe_dispatch=args.moe_dispatch,
+                               remat=args.remat, dp=dp, tp=tp,
+                               dp_compress=args.dp_compress,
+                               suffix=args.suffix)
+                n_err += 1 if "error" in rec else 0
+    if n_err:
+        raise SystemExit(f"{n_err} cell(s) failed")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,127 @@
+"""Roofline aggregator: dry-run JSON artifacts -> the EXPERIMENTS.md tables.
+
+    PYTHONPATH=src python -m repro.launch.roofline --dir experiments/dryrun
+
+Per (arch x shape x mesh): the three roofline terms (seconds), the dominant
+bottleneck, MODEL_FLOPS/HLO_FLOPS, roofline fraction, and a what-would-move-
+the-dominant-term-down note derived from the cell's collective/flop mix.
+"""
+from __future__ import annotations
+
+import argparse
+import glob
+import json
+import os
+from typing import Dict, List
+
+from repro.launch.mesh import HBM_BYTES
+
+
+def load_records(dir_: str, suffix: str = "") -> List[dict]:
+    recs = []
+    for path in sorted(glob.glob(os.path.join(dir_, "*.json"))):
+        stem = os.path.basename(path)[:-5]
+        parts = stem.split("__")
+        want_suffix = parts[3] if len(parts) > 3 else ""
+        if want_suffix != suffix:
+            continue
+        with open(path) as f:
+            recs.append(json.load(f))
+    return recs
+
+
+def advice(rec: dict) -> str:
+    r = rec.get("roofline", {})
+    dom = r.get("dominant")
+    coll = rec.get("hlo", {}).get("collective_wire_bytes", {})
+    ratio = r.get("useful_ratio", 0)
+    if dom == "memory":
+        if ratio < 0.2:
+            return ("replicated attention/probs traffic dominates — shard the "
+                    "sequence (context parallel) or use the flash kernel "
+                    "(keeps probs in VMEM)")
+        return "cut activation round-trips: fuse/remat or larger microbatch"
+    if dom == "collective":
+        big = max(coll, key=coll.get) if coll else "all-gather"
+        if big == "all-gather":
+            return ("weight all-gathers dominate — fewer FSDP gathers "
+                    "(group layers) or switch embed to tp_only ruleset")
+        return f"{big} dominates — reshard to cut cross-axis traffic"
+    if ratio and ratio < 0.5:
+        return ("HLO does >2x model FLOPs — remove replicated compute "
+                "(head-divisible sharding) or drop remat recompute")
+    return "near compute roof — tune block shapes / overlap collectives"
+
+
+def fmt_row(rec: dict) -> Dict[str, str]:
+    r = rec["roofline"]
+    mem = rec.get("memory", {})
+    temp_gb = mem.get("temp_size_in_bytes", 0) / 2**30
+    fits = "Y" if mem.get("temp_size_in_bytes", 0) <= HBM_BYTES else "OVER"
+    return {
+        "arch": rec["arch"], "shape": rec["shape"],
+        "mesh": "2x16x16" if rec.get("multi_pod") else "16x16",
+        "compute_s": f"{r['compute_s']:.4f}",
+        "memory_s": f"{r['memory_s']:.4f}",
+        "collective_s": f"{r['collective_s']:.4f}",
+        "dom": r["dominant"],
+        "useful": f"{r['useful_ratio']:.3f}",
+        "frac": f"{r['roofline_frac']:.4f}",
+        "temp_GB": f"{temp_gb:.1f}", "fits": fits,
+    }
+
+
+def markdown_table(rows: List[Dict[str, str]]) -> str:
+    if not rows:
+        return "(no records)"
+    cols = list(rows[0])
+    out = ["| " + " | ".join(cols) + " |",
+           "|" + "|".join("---" for _ in cols) + "|"]
+    for r in rows:
+        out.append("| " + " | ".join(r[c] for c in cols) + " |")
+    return "\n".join(out)
+
+
+def main(argv=None):
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--dir", default="experiments/dryrun")
+    ap.add_argument("--suffix", default="",
+                    help="variant suffix (perf iterations)")
+    ap.add_argument("--pod", choices=["pod1", "pod2", "both"], default="pod1")
+    ap.add_argument("--advice", action="store_true")
+    ap.add_argument("--json-out", default=None)
+    args = ap.parse_args(argv)
+
+    recs = load_records(args.dir, args.suffix)
+    rows, skips, errors = [], [], []
+    for rec in recs:
+        tag = "pod2" if rec.get("multi_pod") else "pod1"
+        if args.pod != "both" and tag != args.pod:
+            continue
+        if "skip" in rec:
+            skips.append((rec["arch"], rec["shape"], rec["skip"]))
+        elif "error" in rec:
+            errors.append((rec["arch"], rec["shape"], rec["error"]))
+        else:
+            row = fmt_row(rec)
+            if args.advice:
+                row["next_move"] = advice(rec)
+            rows.append(row)
+    rows.sort(key=lambda r: (r["arch"], r["shape"], r["mesh"]))
+    print(markdown_table(rows))
+    if skips:
+        print("\nSkipped cells (documented in DESIGN.md §Arch-applicability):")
+        for a, s, why in sorted(set(skips)):
+            print(f"  - {a} x {s}: {why}")
+    if errors:
+        print("\nERRORS:")
+        for a, s, e in errors:
+            print(f"  - {a} x {s}: {e}")
+    if args.json_out:
+        with open(args.json_out, "w") as f:
+            json.dump(rows, f, indent=1)
+    return rows
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,164 @@
+"""Mixture-of-Experts blocks (Mixtral / Granite-MoE families).
+
+Two dispatch strategies, selectable per call:
+
+* ``einsum``  — T5X/Switch-style capacity-bucketed one-hot dispatch.  This is
+  the *baseline*: robust, compiles everywhere, but spends extra HLO FLOPs on
+  the dispatch/combine einsums (visible in the roofline MODEL/HLO ratio).
+* ``gather``  — capacity-indexed gather/scatter dispatch: only the active
+  expert matmuls cost FLOPs.  This is the beyond-baseline path whose TPU twin
+  is the ``moe_gmm`` Pallas grouped-matmul kernel.
+
+Experts are tensor-parallel on the mesh "model" axis (d_ff sliced), tokens
+stay data-parallel, so no all-to-all is required for either strategy; the EP
+all-to-all variant is discussed in EXPERIMENTS.md §Perf.
+
+The dispatch/combine one-hots are never materialised at rank 5: they are
+expressed as iota-compare multiply-reduces so XLA loop-fuses them into
+(G, g, E, C) outputs directly.
+"""
+from __future__ import annotations
+
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import act_fn, rms_norm
+
+
+def init_moe_ffn_axes():
+    """Logical axes for the (E, d, f)/(E, f, d) expert tensors."""
+    return {"w1": ("experts", "embed", "mlp"),
+            "w3": ("experts", "embed", "mlp"),
+            "w2": ("experts", "mlp", "embed")}
+
+
+def router_topk(x, wr, k: int) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Token->expert routing. Returns (weights (T,k), idx (T,k), aux_loss)."""
+    logits = jnp.einsum("td,de->te", x.astype(jnp.float32),
+                        wr.astype(jnp.float32))
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = lax.top_k(probs, k)
+    w = w / jnp.maximum(jnp.sum(w, axis=-1, keepdims=True), 1e-9)
+    # Switch-style load-balancing auxiliary loss.
+    E = wr.shape[-1]
+    me = jnp.mean(probs, axis=0)
+    ce = jnp.mean(
+        jnp.sum(jax.nn.one_hot(idx, E, dtype=jnp.float32), axis=1), axis=0)
+    aux = E * jnp.sum(me * ce)
+    return w, idx, aux
+
+
+def _group_size(T: int, k: int, cf: float) -> int:
+    """Dispatch group size: keep the (g, E, C) tensors ~O(64M) elements."""
+    g = 512
+    while g * 2 <= T and (2 * g) * (2 * g) * k * cf <= 2 ** 26:
+        g *= 2
+    return min(g, T)
+
+
+def _capacity(tokens: int, n_experts: int, top_k: int, cf: float) -> int:
+    c = int(tokens * top_k * cf / n_experts)
+    return max(8, (c + 7) // 8 * 8)
+
+
+def _expert_ffn(xe, p, act: str):
+    """xe: (E, C, d) -> (E, C, d) through per-expert gated MLP."""
+    w1, w2, w3 = (p["w1"].astype(xe.dtype), p["w2"].astype(xe.dtype),
+                  p["w3"].astype(xe.dtype))
+    h = act_fn(act)(jnp.einsum("ecd,edf->ecf", xe, w1))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, w3)
+    return jnp.einsum("ecf,efd->ecd", h, w2)
+
+
+# ---------------------------------------------------------------------------
+# einsum (one-hot) dispatch — baseline
+# ---------------------------------------------------------------------------
+
+def moe_einsum(x, p, cfg):
+    """x: (T, d) flat tokens. Returns (T, d), aux_loss."""
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    g = _group_size(T, k, cfg.capacity_factor)
+    G = T // g
+    w, idx, aux = router_topk(x, p["router"], k)
+    C = _capacity(g, E, k, cfg.capacity_factor)
+
+    xg = x.reshape(G, g, d)
+    wg = w.reshape(G, g, k)                                  # fp32
+    ig = idx.reshape(G, g, k)
+
+    onehot = jax.nn.one_hot(ig, E, dtype=jnp.float32)        # (G, g, k, E)
+    # slot of each (token, k) inside its expert's capacity bucket,
+    # priority token-major then slot-major (cumsum over flattened g*k).
+    pos = jnp.cumsum(onehot.reshape(G, g * k, E), axis=1).reshape(
+        G, g, k, E) * onehot - 1.0
+    keep = (pos >= 0.0) & (pos < C)
+    c_iota = jnp.arange(C, dtype=jnp.float32)
+    # (G,g,k,E,C) exists only inside the loop fusion of the k-reduction.
+    sel = jnp.where(keep[..., None], (pos[..., None] == c_iota), False)
+    dispatch = jnp.sum(sel, axis=2, dtype=jnp.float32)       # (G, g, E, C)
+    combine = jnp.sum(wg[..., None, None] * sel, axis=2)     # (G, g, E, C)
+
+    xe = jnp.einsum("gsec,gsd->gecd", dispatch.astype(x.dtype), xg)
+    ye = _apply_experts_grouped(xe, p, cfg)
+    y = jnp.einsum("gsec,gecd->gsd", combine.astype(x.dtype), ye)
+    return y.reshape(T, d), aux
+
+
+def _apply_experts_grouped(xe, p, cfg):
+    """xe: (G, E, C, d) -> (G, E, C, d)."""
+    G, E, C, d = xe.shape
+    out = _expert_ffn(
+        xe.transpose(1, 0, 2, 3).reshape(E, G * C, d), p, cfg.act)
+    return out.reshape(E, G, C, d).transpose(1, 0, 2, 3)
+
+
+# ---------------------------------------------------------------------------
+# gather dispatch — optimized path (Pallas moe_gmm twin on TPU)
+# ---------------------------------------------------------------------------
+
+def moe_gather(x, p, cfg, kernel_mode: str = "reference"):
+    """Capacity-indexed gather dispatch: active-FLOPs only."""
+    T, d = x.shape
+    E, k = cfg.n_experts, cfg.top_k
+    w, idx, aux = router_topk(x, p["router"], k)
+    C = _capacity(T, E, k, cfg.capacity_factor)
+
+    flat_e = idx.reshape(-1)                                 # (T*k,)
+    onehot = jax.nn.one_hot(flat_e, E, dtype=jnp.int32)
+    slot = jnp.sum(jnp.cumsum(onehot, axis=0) * onehot, axis=-1) - 1
+    keep = slot < C
+    tok_id = jnp.repeat(jnp.arange(T), k)
+    # scatter token ids into (E, C) buckets; capacity overflow drops.
+    bucket = jnp.full((E, C), T, dtype=jnp.int32)            # T == pad row
+    bucket = bucket.at[flat_e, jnp.where(keep, slot, C)].set(
+        tok_id, mode="drop")
+    xpad = jnp.concatenate([x, jnp.zeros((1, d), x.dtype)], axis=0)
+    xe = xpad[bucket]                                        # (E, C, d)
+    if kernel_mode == "pallas":
+        from repro.kernels.moe_gmm import ops as gmm_ops
+        ye = gmm_ops.expert_ffn(xe, p, cfg.act)
+    else:
+        ye = _expert_ffn(xe, p, cfg.act)
+    # combine: gather outputs back per (token, k) slot, weighted scatter-add.
+    wk = w.reshape(-1).astype(x.dtype)
+    src = ye[flat_e, jnp.clip(slot, 0, C - 1)] * jnp.where(
+        keep, wk, 0.0)[:, None]
+    y = jnp.zeros((T + 1, d), x.dtype)
+    y = y.at[jnp.where(keep, tok_id, T)].add(src, mode="drop")
+    return y[:T], aux
+
+
+def moe_block(x, p, cfg, *, dispatch: str = "einsum",
+              kernel_mode: str = "reference"):
+    """Pre-norm MoE residual block. x: (B, S, d)."""
+    B, S, d = x.shape
+    h = rms_norm(x, p["ln"], cfg.norm_eps).reshape(B * S, d)
+    if dispatch == "gather":
+        y, aux = moe_gather(h, p, cfg, kernel_mode)
+    else:
+        y, aux = moe_einsum(h, p, cfg)
+    return x + y.reshape(B, S, d), aux

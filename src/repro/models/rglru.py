@@ -1,0 +1,161 @@
+"""RG-LRU recurrent block (Griffin / RecurrentGemma, arXiv:2402.19427).
+
+The temporal mixer is a *diagonal* gated linear recurrence
+
+    a_t = exp(-c * softplus(Lambda) * sigmoid(W_a x_t))          (real, in (0,1))
+    h_t = a_t * h_{t-1} + sqrt(1 - a_t^2) * (i_t * x_t),  i_t = sigmoid(W_x x_t)
+
+which is exactly parallelisable with ``lax.associative_scan`` (reference path)
+and has a chunked Pallas TPU twin in ``repro.kernels.rglru_scan``.
+
+Block layout follows Griffin: two branches (gate: GeLU; recurrent: causal
+conv4 -> RG-LRU), elementwise merge, output projection.  The surrounding MLP
+sublayer lives in ``transformer.py`` like every other channel mixer.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import rms_norm, dense
+from repro.models.xlstm import causal_conv1d, conv1d_decode, CONV_K
+
+RGLRU_C = 8.0  # the paper's fixed temperature
+
+
+def rglru_scan_ref(x, a):
+    """Associative linear scan: h_t = a_t h_{t-1} + x_t.  x, a: (B, S, D)."""
+    def combine(c1, c2):
+        a1, x1 = c1
+        a2, x2 = c2
+        return a2 * a1, a2 * x1 + x2
+
+    a_out, x_out = lax.associative_scan(combine, (a, x), axis=1)
+    del a_out
+    return x_out
+
+
+def rglru(x, lam, gate_a, gate_x, h0=None):
+    """RG-LRU recurrence. x: (B,S,D) branch activations (fp32 math).
+
+    gate_a, gate_x: (B,S,D) pre-activations; lam: (D,) learnt log-rate.
+    Returns (y: (B,S,D), h_last: (B,D)).
+    """
+    x32 = x.astype(jnp.float32)
+    log_a = -RGLRU_C * jax.nn.softplus(lam.astype(jnp.float32)) * \
+        jax.nn.sigmoid(gate_a.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    gated = jax.nn.sigmoid(gate_x.astype(jnp.float32)) * x32
+    # sqrt(1 - a^2) computed stably via expm1: 1-exp(2 log a)
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    inp = beta * gated
+    if h0 is not None:
+        inp = inp.at[:, 0, :].add(a[:, 0, :] * h0.astype(jnp.float32))
+    y = rglru_scan_ref(inp, a)
+    return y, y[:, -1, :]
+
+
+def rglru_decode(x_t, lam, gate_a, gate_x, h):
+    """One-step RG-LRU. x_t, gates: (B, D); h: (B, D) fp32 state."""
+    x32 = x_t.astype(jnp.float32)
+    log_a = -RGLRU_C * jax.nn.softplus(lam.astype(jnp.float32)) * \
+        jax.nn.sigmoid(gate_a.astype(jnp.float32))
+    a = jnp.exp(log_a)
+    beta = jnp.sqrt(-jnp.expm1(2.0 * log_a))
+    h_new = a * h + beta * jax.nn.sigmoid(gate_x.astype(jnp.float32)) * x32
+    return h_new, h_new
+
+
+# ---------------------------------------------------------------------------
+# Block
+# ---------------------------------------------------------------------------
+
+def d_rnn(cfg) -> int:
+    """Recurrent width; RecurrentGemma uses lru_width == d_model."""
+    return cfg.d_model
+
+
+def init_rglru(rng, cfg):
+    d = cfg.d_model
+    dr = d_rnn(cfg)
+    keys = jax.random.split(rng, 6)
+
+    def lin(key, m, n):
+        return jax.random.normal(key, (m, n), jnp.float32) / math.sqrt(m)
+
+    # Lambda init so that a^c = sigmoid(lam)... paper inits a in [0.9, 0.999]:
+    u = jax.random.uniform(keys[0], (dr,), jnp.float32, 0.9, 0.999)
+    lam = jnp.log(jnp.expm1(-jnp.log(u) / RGLRU_C))  # inv-softplus of -log(u)/c
+
+    p = {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "w_x": lin(keys[1], d, dr),              # recurrent branch in-proj
+        "w_g": lin(keys[2], d, dr),              # gate branch in-proj
+        "conv_w": jax.random.normal(keys[3], (CONV_K, dr), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((dr,), jnp.float32),
+        "lam": lam,
+        "w_a": lin(keys[4], dr, dr) * 0.1,       # recurrence gate
+        "b_a": jnp.zeros((dr,), jnp.float32),
+        "w_i": lin(keys[5], dr, dr) * 0.1,       # input gate
+        "b_i": jnp.zeros((dr,), jnp.float32),
+        "w_out": lin(jax.random.fold_in(rng, 7), dr, d),
+    }
+    axes = {
+        "ln": ("embed",),
+        "w_x": ("embed", "rnn"), "w_g": ("embed", "rnn"),
+        "conv_w": ("conv", "rnn"), "conv_b": ("rnn",),
+        "lam": ("rnn",),
+        "w_a": ("rnn", "rnn_out"), "b_a": ("rnn",),
+        "w_i": ("rnn", "rnn_out"), "b_i": ("rnn",),
+        "w_out": ("rnn", "embed"),
+    }
+    return p, axes
+
+
+def apply_rglru(x, p, cfg, *, kernel_mode: str = "reference",
+                return_state: bool = False):
+    """Full-sequence Griffin recurrent block. x: (B, S, d)."""
+    h_in = rms_norm(x, p["ln"], cfg.norm_eps)
+    xb_pre = dense(h_in, p["w_x"])
+    gb = jax.nn.gelu(dense(h_in, p["w_g"]))
+    xb = causal_conv1d(xb_pre, p["conv_w"], p["conv_b"])
+    ga = dense(xb, p["w_a"]) + p["b_a"]
+    gx = dense(xb, p["w_i"]) + p["b_i"]
+    if kernel_mode == "pallas":
+        from repro.kernels.rglru_scan import ops as rk
+        y, h_last = rk.rglru(xb, p["lam"], ga, gx)
+    else:
+        y, h_last = rglru(xb, p["lam"], ga, gx)
+    y = y.astype(x.dtype) * gb
+    out = x + dense(y, p["w_out"])
+    if return_state:
+        state = {"h": h_last,
+                 "conv": xb_pre[:, -(CONV_K - 1):].astype(jnp.bfloat16)}
+        return out, state
+    return out
+
+
+def init_state_rglru(cfg, B):
+    dr = d_rnn(cfg)
+    return {
+        "h": jnp.zeros((B, dr), jnp.float32),
+        "conv": jnp.zeros((B, CONV_K - 1, dr), jnp.bfloat16),
+    }
+
+
+def decode_rglru(x, p, cfg, state):
+    """One-token Griffin recurrent step. x: (B, 1, d)."""
+    h_in = rms_norm(x[:, 0], p["ln"], cfg.norm_eps)
+    xb = dense(h_in, p["w_x"])
+    gb = jax.nn.gelu(dense(h_in, p["w_g"]))
+    xb, conv_buf = conv1d_decode(xb, state["conv"].astype(x.dtype),
+                                 p["conv_w"], p["conv_b"])
+    ga = dense(xb, p["w_a"]) + p["b_a"]
+    gx = dense(xb, p["w_i"]) + p["b_i"]
+    y, h_new = rglru_decode(xb, p["lam"], ga, gx, state["h"])
+    y = y.astype(x.dtype) * gb
+    out = x + dense(y, p["w_out"])[:, None, :]
+    return out, {"h": h_new, "conv": conv_buf.astype(jnp.bfloat16)}

@@ -1,0 +1,464 @@
+"""xLSTM blocks: mLSTM (matrix memory, chunkwise-parallel) and sLSTM
+(scalar memory, strictly sequential), after arXiv:2405.04517.
+
+Reference path is pure jnp; the chunkwise mLSTM math has a Pallas TPU twin in
+``repro.kernels.mlstm_scan``.  All recurrences are numerically stabilised in
+log space (the ``m`` running-max trick from the paper).
+
+Shapes follow the repo convention: activations (B, S, d); mLSTM inner width is
+``pf * d`` split into ``n_heads`` heads of ``dh = pf*d/n_heads``.
+"""
+from __future__ import annotations
+
+import math
+from typing import Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+from repro.models.layers import rms_norm, dense
+
+MLSTM_PF = 2          # mLSTM up-projection factor (paper: 2)
+SLSTM_PF = 4.0 / 3.0  # sLSTM post-MLP projection factor (paper: 4/3)
+CONV_K = 4            # causal depthwise conv width
+
+
+# ---------------------------------------------------------------------------
+# Shared helpers
+# ---------------------------------------------------------------------------
+
+def causal_conv1d(x, w, b):
+    """Depthwise causal conv. x: (B, S, C); w: (K, C); b: (C,)."""
+    K = w.shape[0]
+    pad = jnp.pad(x, ((0, 0), (K - 1, 0), (0, 0)))
+    out = jnp.zeros_like(x)
+    for i in range(K):  # K=4 unrolled taps — fuses into one kernel
+        out = out + pad[:, i:i + x.shape[1], :] * w[i].astype(x.dtype)
+    return out + b.astype(x.dtype)
+
+
+def conv1d_decode(x_t, conv_buf, w, b):
+    """One-step causal conv against a (B, K-1, C) lag buffer."""
+    xs = jnp.concatenate([conv_buf, x_t[:, None, :]], axis=1)  # (B, K, C)
+    out = jnp.einsum("bkc,kc->bc", xs, w.astype(x_t.dtype)) + b.astype(x_t.dtype)
+    return out, xs[:, 1:, :]
+
+
+# ---------------------------------------------------------------------------
+# mLSTM cell math — chunkwise parallel form (reference for the Pallas kernel)
+# ---------------------------------------------------------------------------
+
+def mlstm_sequential(q, k, v, ig, fg, init_state=None):
+    """Sequential oracle. q,k,v: (B,S,H,Dh); ig,fg: (B,S,H) pre-activations.
+
+    Returns (h: (B,S,H,Dh), final_state).  fp32 math, log-space stabilised:
+      m_t = max(fg_t + m_{t-1}, ig_t)
+      C_t = exp(fg_t + m_{t-1} - m_t) C_{t-1} + exp(ig_t - m_t) k_t v_t^T
+      n_t likewise;  h_t = C_t^T q_t / max(|n_t.q_t|, exp(-m_t))
+    """
+    B, S, H, Dh = q.shape
+    q32 = q.astype(jnp.float32) / math.sqrt(Dh)
+    k32, v32 = k.astype(jnp.float32), v.astype(jnp.float32)
+    fg32, ig32 = fg.astype(jnp.float32), ig.astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(fg32)             # forget gate = sigmoid, log space
+
+    if init_state is None:
+        C0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+        n0 = jnp.zeros((B, H, Dh), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = init_state
+
+    def step(carry, xs):
+        C, n, m = carry
+        qt, kt, vt, it, ft = xs
+        m_new = jnp.maximum(ft + m, it)
+        fgate = jnp.exp(ft + m - m_new)[..., None]            # (B,H,1)
+        igate = jnp.exp(it - m_new)[..., None]                # (B,H,1)
+        C = fgate[..., None] * C + igate[..., None] * (
+            kt[..., :, None] * vt[..., None, :])              # (B,H,Dh,Dh)
+        n = fgate * n + igate * kt
+        num = jnp.einsum("bhij,bhi->bhj", C, qt)
+        den = jnp.maximum(jnp.abs(jnp.einsum("bhi,bhi->bh", n, qt)),
+                          jnp.exp(-m_new))[..., None]
+        return (C, n, m_new), num / den
+
+    xs = tuple(a.swapaxes(0, 1) for a in (q32, k32, v32, ig32, lf))
+    (C, n, m), hs = lax.scan(step, (C0, n0, m0), xs)
+    return hs.swapaxes(0, 1), (C, n, m)
+
+
+def mlstm_chunkwise(q, k, v, ig, fg, *, chunk: int = 64, init_state=None):
+    """Chunkwise-parallel mLSTM (TPU-friendly; same math as sequential).
+
+    Intra-chunk: masked quadratic attention with per-pair gate decays.
+    Inter-chunk: O(Dh^2) state carried between chunks by a lax.scan.
+    Returns (h, final_state) matching ``mlstm_sequential``.
+    """
+    B, S, H, Dh = q.shape
+    chunk = min(chunk, S)
+    while S % chunk:
+        chunk //= 2
+    L, T = S // chunk, chunk
+    q32 = (q.astype(jnp.float32) / math.sqrt(Dh)).reshape(B, L, T, H, Dh)
+    k32 = k.astype(jnp.float32).reshape(B, L, T, H, Dh)
+    v32 = v.astype(jnp.float32).reshape(B, L, T, H, Dh)
+    ig32 = ig.astype(jnp.float32).reshape(B, L, T, H)
+    lf = jax.nn.log_sigmoid(fg.astype(jnp.float32)).reshape(B, L, T, H)
+
+    # cumulative log-forget inside each chunk: b_t = sum_{s<=t} lf_s
+    bcum = jnp.cumsum(lf, axis=2)                         # (B,L,T,H)
+    btot = bcum[:, :, -1]                                 # (B,L,H)
+
+    if init_state is None:
+        C0 = jnp.zeros((B, H, Dh, Dh), jnp.float32)
+        n0 = jnp.zeros((B, H, Dh), jnp.float32)
+        m0 = jnp.full((B, H), -1e30, jnp.float32)
+    else:
+        C0, n0, m0 = init_state
+
+    idx = jnp.arange(T)
+    causal = idx[:, None] >= idx[None, :]                 # (T,T)
+
+    def chunk_step(carry, xs):
+        C, n, m = carry                                    # inter-chunk state
+        qc, kc, vc, igc, bc, bt = xs                       # (B,T,H,*) each
+        # ---- stabilisers -------------------------------------------------
+        # log weight of intra-chunk pair (t, s): b_t - b_s + ig_s
+        a = bc[:, :, None] - bc[:, None] + igc[:, None]    # (B,T,T,H)
+        a = jnp.where(causal[None, :, :, None], a, -jnp.inf)
+        m_intra = jnp.max(a, axis=2)                       # (B,T,H)
+        # log weight of inter-chunk contribution at t: b_t + m_prev
+        m_inter = bc + m[:, None]                          # (B,T,H)
+        m_t = jnp.maximum(m_intra, m_inter)                # running stabiliser
+        # ---- intra-chunk quadratic part ---------------------------------
+        w_inr = jnp.exp(a - m_t[:, :, None])               # (B,T,T,H)
+        scores = jnp.einsum("bthd,bshd->btsh", qc, kc) * w_inr
+        num = jnp.einsum("btsh,bshd->bthd", scores, vc)
+        # ---- inter-chunk recurrent part ----------------------------------
+        w_out = jnp.exp(m_inter - m_t)                     # (B,T,H)
+        num = num + jnp.einsum("bthd,bhde->bthe", qc * w_out[..., None], C)
+        den_intra = jnp.einsum("btsh->bth", scores)
+        den_inter = jnp.einsum("bthd,bhd->bth", qc * w_out[..., None], n)
+        den = den_intra + den_inter
+        h = num / jnp.maximum(jnp.abs(den), jnp.exp(-m_t))[..., None]
+        # ---- state update ------------------------------------------------
+        m_new = jnp.maximum(bt + m, jnp.max(igc + bt[:, None] - bc, axis=1))
+        f_c = jnp.exp(bt + m - m_new)                      # (B,H)
+        g = jnp.exp(igc + (bt[:, None] - bc) - m_new[:, None])  # (B,T,H)
+        C = f_c[..., None, None] * C + jnp.einsum(
+            "bthd,bthe->bhde", kc * g[..., None], vc)
+        n = f_c[..., None] * n + jnp.einsum("bthd->bhd", kc * g[..., None])
+        return (C, n, m_new), h
+
+    xs = tuple(a.swapaxes(0, 1) for a in (q32, k32, v32, ig32, bcum, btot))
+    (C, n, m), hs = lax.scan(chunk_step, (C0, n0, m0), xs)
+    h = hs.swapaxes(0, 1).reshape(B, S, H, Dh)
+    return h, (C, n, m)
+
+
+def mlstm_decode_step(q, k, v, ig, fg, state):
+    """One-token mLSTM update. q,k,v: (B,H,Dh); ig,fg: (B,H)."""
+    C, n, m = state
+    Dh = q.shape[-1]
+    q32 = q.astype(jnp.float32) / math.sqrt(Dh)
+    k32, v32 = k.astype(jnp.float32), v.astype(jnp.float32)
+    lf = jax.nn.log_sigmoid(fg.astype(jnp.float32))
+    ig32 = ig.astype(jnp.float32)
+    m_new = jnp.maximum(lf + m, ig32)
+    fgate = jnp.exp(lf + m - m_new)[..., None]
+    igate = jnp.exp(ig32 - m_new)[..., None]
+    C = fgate[..., None] * C + igate[..., None] * (k32[..., :, None] * v32[..., None, :])
+    n = fgate * n + igate * k32
+    num = jnp.einsum("bhij,bhi->bhj", C, q32)
+    den = jnp.maximum(jnp.abs(jnp.einsum("bhi,bhi->bh", n, q32)),
+                      jnp.exp(-m_new))[..., None]
+    return num / den, (C, n, m_new)
+
+
+# ---------------------------------------------------------------------------
+# mLSTM block (pre-LN residual, up-proj 2x, conv4, per-head gates)
+# ---------------------------------------------------------------------------
+
+def init_mlstm(rng, cfg):
+    d = cfg.d_model
+    inner = MLSTM_PF * d
+    H = cfg.n_heads
+    keys = jax.random.split(rng, 8)
+
+    def lin(key, m, n):
+        return jax.random.normal(key, (m, n), jnp.float32) / math.sqrt(m)
+
+    p = {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "w_up": lin(keys[0], d, 2 * inner),          # [x branch | z gate branch]
+        "conv_w": jax.random.normal(keys[1], (CONV_K, inner), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((inner,), jnp.float32),
+        # block-diagonal per-head projections (paper's mLSTM layout)
+        "wq": jax.random.normal(keys[2], (H, inner // H, inner // H),
+                                jnp.float32) / math.sqrt(inner // H),
+        "wk": jax.random.normal(keys[3], (H, inner // H, inner // H),
+                                jnp.float32) / math.sqrt(inner // H),
+        "wv": jax.random.normal(keys[4], (H, inner // H, inner // H),
+                                jnp.float32) / math.sqrt(inner // H),
+        "w_ig": lin(keys[5], inner, H) * 0.1,
+        "b_ig": jnp.zeros((H,), jnp.float32),
+        "w_fg": lin(keys[6], inner, H) * 0.1,
+        # forget bias init >0 => sigmoid(f)≈1 early (paper init in [3, 6])
+        "b_fg": jnp.linspace(3.0, 6.0, H).astype(jnp.float32),
+        "skip": jnp.ones((inner,), jnp.float32),
+        "gn": jnp.zeros((inner,), jnp.float32),
+        "w_down": lin(keys[7], inner, d),
+    }
+    axes = {
+        "ln": ("embed",),
+        "w_up": ("embed", "rnn"),
+        "conv_w": ("conv", "rnn"), "conv_b": ("rnn",),
+        "wq": ("kv_heads", None, None),
+        "wk": ("kv_heads", None, None),
+        "wv": ("kv_heads", None, None),
+        "w_ig": ("rnn", None), "b_ig": (None,),
+        "w_fg": ("rnn", None), "b_fg": (None,),
+        "skip": ("rnn",), "gn": ("rnn",),
+        "w_down": ("rnn", "embed"),
+    }
+    return p, axes
+
+
+def _mlstm_qkvg(h_in, p, cfg):
+    """Shared pre-computation: returns (q,k,v,ig,fg,z_gate,x_conv)."""
+    B = h_in.shape[0]
+    d = cfg.d_model
+    inner = MLSTM_PF * d
+    H = cfg.n_heads
+    Dh = inner // H
+    up = dense(h_in, p["w_up"])
+    x_br, z_br = up[..., :inner], up[..., inner:]
+    return x_br, z_br, (B, H, Dh, inner)
+
+
+def apply_mlstm(x, p, cfg, *, chunk: int = 256, kernel_mode: str = "reference",
+                return_state: bool = False):
+    """Full-sequence mLSTM block. x: (B, S, d) -> (B, S, d)."""
+    B, S, d = x.shape
+    h_in = rms_norm(x, p["ln"], cfg.norm_eps)
+    x_br, z_br, (_, H, Dh, inner) = _mlstm_qkvg(h_in, p, cfg)
+    xc = causal_conv1d(x_br, p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    xch = xc.reshape(B, S, H, Dh)
+    q = jnp.einsum("bshd,hde->bshe", xch, p["wq"].astype(xc.dtype))
+    k = jnp.einsum("bshd,hde->bshe", xch, p["wk"].astype(xc.dtype))
+    v = jnp.einsum("bshd,hde->bshe", x_br.reshape(B, S, H, Dh),
+                   p["wv"].astype(xc.dtype))
+    ig = dense(xc, p["w_ig"]) + p["b_ig"]
+    fg = dense(xc, p["w_fg"]) + p["b_fg"]
+    if kernel_mode == "pallas":
+        from repro.kernels.mlstm_scan import ops as mk
+        h, (C, n, m) = mk.mlstm_chunkwise(q, k, v, ig, fg, chunk=chunk)
+    else:
+        h, (C, n, m) = mlstm_chunkwise(q, k, v, ig, fg, chunk=chunk)
+    h = h.astype(x.dtype).reshape(B, S, inner)
+    h = h + p["skip"].astype(x.dtype) * xc                     # learnable skip
+    h = rms_norm(h, p["gn"], cfg.norm_eps)                     # per-group norm
+    h = h * jax.nn.silu(z_br)                                  # output gate
+    y = x + dense(h, p["w_down"])
+    if return_state:
+        state = {"C": C, "n": n, "m": m,
+                 "conv": x_br[:, -(CONV_K - 1):].astype(jnp.bfloat16)}
+        return y, state
+    return y
+
+
+def init_state_mlstm(cfg, B):
+    d = cfg.d_model
+    inner = MLSTM_PF * d
+    H = cfg.n_heads
+    Dh = inner // H
+    return {
+        "C": jnp.zeros((B, H, Dh, Dh), jnp.float32),
+        "n": jnp.zeros((B, H, Dh), jnp.float32),
+        "m": jnp.full((B, H), -1e30, jnp.float32),
+        "conv": jnp.zeros((B, CONV_K - 1, inner), jnp.bfloat16),
+    }
+
+
+def decode_mlstm(x, p, cfg, state):
+    """One-token mLSTM step. x: (B, 1, d)."""
+    B, _, d = x.shape
+    inner = MLSTM_PF * d
+    H = cfg.n_heads
+    Dh = inner // H
+    h_in = rms_norm(x[:, 0], p["ln"], cfg.norm_eps)
+    up = dense(h_in, p["w_up"])
+    x_br, z_br = up[..., :inner], up[..., inner:]
+    xc, conv_buf = conv1d_decode(x_br, state["conv"].astype(x.dtype),
+                                 p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    xch = xc.reshape(B, H, Dh)
+    q = jnp.einsum("bhd,hde->bhe", xch, p["wq"].astype(xc.dtype))
+    k = jnp.einsum("bhd,hde->bhe", xch, p["wk"].astype(xc.dtype))
+    v = jnp.einsum("bhd,hde->bhe", x_br.reshape(B, H, Dh),
+                   p["wv"].astype(xc.dtype))
+    ig = dense(xc, p["w_ig"]) + p["b_ig"]
+    fg = dense(xc, p["w_fg"]) + p["b_fg"]
+    h, (C, n, m) = mlstm_decode_step(q, k, v, ig, fg,
+                                     (state["C"], state["n"], state["m"]))
+    h = h.astype(x.dtype).reshape(B, inner)
+    h = h + p["skip"].astype(x.dtype) * xc
+    h = rms_norm(h, p["gn"], cfg.norm_eps)
+    h = h * jax.nn.silu(z_br)
+    y = x + dense(h, p["w_down"])[:, None, :]
+    return y, {"C": C, "n": n, "m": m, "conv": conv_buf.astype(jnp.bfloat16)}
+
+
+# ---------------------------------------------------------------------------
+# sLSTM block (scalar memory, sequential; block-diagonal recurrence)
+# ---------------------------------------------------------------------------
+
+def init_slstm(rng, cfg):
+    d = cfg.d_model
+    H = cfg.n_heads
+    Dh = d // H
+    ff = int(SLSTM_PF * d)
+    keys = jax.random.split(rng, 12)
+
+    def lin(key, m, n):
+        return jax.random.normal(key, (m, n), jnp.float32) / math.sqrt(m)
+
+    def rec(key):
+        return jax.random.normal(key, (H, Dh, Dh), jnp.float32) / math.sqrt(Dh)
+
+    p = {
+        "ln": jnp.zeros((d,), jnp.float32),
+        "conv_w": jax.random.normal(keys[0], (CONV_K, d), jnp.float32) * 0.1,
+        "conv_b": jnp.zeros((d,), jnp.float32),
+        "w_z": lin(keys[1], d, d), "r_z": rec(keys[2]), "b_z": jnp.zeros((d,)),
+        "w_i": lin(keys[3], d, d), "r_i": rec(keys[4]), "b_i": jnp.zeros((d,)),
+        "w_f": lin(keys[5], d, d), "r_f": rec(keys[6]),
+        "b_f": jnp.full((d,), 4.0, jnp.float32),
+        "w_o": lin(keys[7], d, d), "r_o": rec(keys[8]), "b_o": jnp.zeros((d,)),
+        "gn": jnp.zeros((d,), jnp.float32),
+        "mlp_ln": jnp.zeros((d,), jnp.float32),
+        "w1": lin(keys[9], d, ff), "w3": lin(keys[10], d, ff),
+        "w2": lin(keys[11], ff, d),
+    }
+    axes = {
+        "ln": ("embed",), "conv_w": ("conv", "embed"), "conv_b": ("embed",),
+        "w_z": ("embed", "rnn_out"), "r_z": ("kv_heads", None, None), "b_z": ("rnn_out",),
+        "w_i": ("embed", "rnn_out"), "r_i": ("kv_heads", None, None), "b_i": ("rnn_out",),
+        "w_f": ("embed", "rnn_out"), "r_f": ("kv_heads", None, None), "b_f": ("rnn_out",),
+        "w_o": ("embed", "rnn_out"), "r_o": ("kv_heads", None, None), "b_o": ("rnn_out",),
+        "gn": ("embed",), "mlp_ln": ("embed",),
+        "w1": ("embed", "mlp"), "w3": ("embed", "mlp"), "w2": ("mlp", "embed"),
+    }
+    return p, axes
+
+
+SLSTM_UNROLL = 16  # steps per scan body: recurrent weights are read from
+                   # HBM once per body (VMEM-resident across the unroll)
+                   # instead of once per timestep — §Perf iteration C1
+
+
+def _slstm_scan(zx, ix, fx, ox, p, H, Dh, init, unroll: int = SLSTM_UNROLL):
+    """Sequential sLSTM over time. *x: (B, S, H, Dh) pre-activations."""
+    rz, ri = p["r_z"].astype(jnp.float32), p["r_i"].astype(jnp.float32)
+    rf, ro = p["r_f"].astype(jnp.float32), p["r_o"].astype(jnp.float32)
+    S = zx.shape[1]
+    U = min(unroll, S)
+    while S % U:
+        U //= 2
+
+    def one_step(carry, zt, it, ft, ot):
+        h, c, n, m = carry                       # (B, H, Dh) each
+        zt = jnp.tanh(zt + jnp.einsum("bhi,hij->bhj", h, rz))
+        it = it + jnp.einsum("bhi,hij->bhj", h, ri)
+        ft = ft + jnp.einsum("bhi,hij->bhj", h, rf)
+        ot = jax.nn.sigmoid(ot + jnp.einsum("bhi,hij->bhj", h, ro))
+        lf = jax.nn.log_sigmoid(ft)
+        m_new = jnp.maximum(lf + m, it)
+        i_g = jnp.exp(it - m_new)
+        f_g = jnp.exp(lf + m - m_new)
+        c = f_g * c + i_g * zt
+        n = f_g * n + i_g
+        h = ot * c / jnp.maximum(n, 1e-6)
+        return (h, c, n, m_new), h
+
+    def body(carry, xs):
+        outs = []
+        for u in range(U):                       # unrolled inner steps
+            carry, h = one_step(carry, xs[0][u], xs[1][u], xs[2][u],
+                                xs[3][u])
+            outs.append(h)
+        return carry, jnp.stack(outs)
+
+    # (B,S,H,Dh) -> (S/U, U, B, H, Dh)
+    xs = tuple(a.astype(jnp.float32).swapaxes(0, 1).reshape(
+        (S // U, U) + a.shape[:1] + a.shape[2:]) for a in (zx, ix, fx, ox))
+    (h, c, n, m), hs = lax.scan(body, init, xs)
+    hs = hs.reshape((S,) + hs.shape[2:]).swapaxes(0, 1)
+    return hs, (h, c, n, m)
+
+
+def apply_slstm(x, p, cfg, *, return_state: bool = False):
+    """Full-sequence sLSTM block. x: (B, S, d)."""
+    B, S, d = x.shape
+    H = cfg.n_heads
+    Dh = d // H
+    h_in = rms_norm(x, p["ln"], cfg.norm_eps)
+    xc = jax.nn.silu(causal_conv1d(h_in, p["conv_w"], p["conv_b"]))
+    zx = (dense(h_in, p["w_z"]) + p["b_z"]).reshape(B, S, H, Dh)
+    ix = (dense(xc, p["w_i"]) + p["b_i"]).reshape(B, S, H, Dh)
+    fx = (dense(xc, p["w_f"]) + p["b_f"]).reshape(B, S, H, Dh)
+    ox = (dense(h_in, p["w_o"]) + p["b_o"]).reshape(B, S, H, Dh)
+    init = (jnp.zeros((B, H, Dh), jnp.float32),) * 2 + (
+        jnp.zeros((B, H, Dh), jnp.float32),
+        jnp.full((B, H, Dh), -1e30, jnp.float32))
+    hs, (h_f, c_f, n_f, m_f) = _slstm_scan(zx, ix, fx, ox, p, H, Dh, init)
+    h = rms_norm(hs.astype(x.dtype).reshape(B, S, d), p["gn"], cfg.norm_eps)
+    y = x + h
+    # post-MLP (GeGLU, projection factor 4/3)
+    hm = rms_norm(y, p["mlp_ln"], cfg.norm_eps)
+    hm = jax.nn.gelu(dense(hm, p["w1"])) * dense(hm, p["w3"])
+    y = y + dense(hm, p["w2"])
+    if return_state:
+        state = {"h": h_f, "c": c_f, "n": n_f, "m": m_f,
+                 "conv": h_in[:, -(CONV_K - 1):].astype(jnp.bfloat16)}
+        return y, state
+    return y
+
+
+def init_state_slstm(cfg, B):
+    d = cfg.d_model
+    H = cfg.n_heads
+    Dh = d // H
+    return {
+        "h": jnp.zeros((B, H, Dh), jnp.float32),
+        "c": jnp.zeros((B, H, Dh), jnp.float32),
+        "n": jnp.zeros((B, H, Dh), jnp.float32),
+        "m": jnp.full((B, H, Dh), -1e30, jnp.float32),
+        "conv": jnp.zeros((B, CONV_K - 1, d), jnp.bfloat16),
+    }
+
+
+def decode_slstm(x, p, cfg, state):
+    B, _, d = x.shape
+    H = cfg.n_heads
+    Dh = d // H
+    h_in = rms_norm(x[:, 0], p["ln"], cfg.norm_eps)
+    xc, conv_buf = conv1d_decode(h_in, state["conv"].astype(x.dtype),
+                                 p["conv_w"], p["conv_b"])
+    xc = jax.nn.silu(xc)
+    zx = (dense(h_in, p["w_z"]) + p["b_z"]).reshape(B, 1, H, Dh)
+    ix = (dense(xc, p["w_i"]) + p["b_i"]).reshape(B, 1, H, Dh)
+    fx = (dense(xc, p["w_f"]) + p["b_f"]).reshape(B, 1, H, Dh)
+    ox = (dense(h_in, p["w_o"]) + p["b_o"]).reshape(B, 1, H, Dh)
+    init = (state["h"], state["c"], state["n"], state["m"])
+    hs, (h_f, c_f, n_f, m_f) = _slstm_scan(zx, ix, fx, ox, p, H, Dh, init)
+    h = rms_norm(hs.astype(x.dtype).reshape(B, 1, d), p["gn"], cfg.norm_eps)
+    y = x + h
+    hm = rms_norm(y, p["mlp_ln"], cfg.norm_eps)
+    hm = jax.nn.gelu(dense(hm, p["w1"])) * dense(hm, p["w3"])
+    y = y + dense(hm, p["w2"])
+    return y, {"h": h_f, "c": c_f, "n": n_f, "m": m_f,
+               "conv": conv_buf.astype(jnp.bfloat16)}

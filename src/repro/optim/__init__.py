@@ -1,0 +1,4 @@
+from repro.optim.adamw import (AdamWConfig, adamw_init, adamw_update,
+                               cosine_schedule, wsd_schedule, make_schedule)
+from repro.optim.compression import (quantize_int8, dequantize_int8,
+                                     ef_compress_update)

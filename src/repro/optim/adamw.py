@@ -1,0 +1,112 @@
+"""AdamW with global-norm clipping and WSD / cosine LR schedules.
+
+Self-contained optax-free implementation so the framework has no deps beyond
+jax + numpy.  Optimizer state is a pytree mirroring params — it shards with
+the same PartitionSpecs (ZeRO-style: states live wherever the param shard
+lives, no extra communication).
+"""
+from __future__ import annotations
+
+import math
+from dataclasses import dataclass
+from typing import Any, Callable, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+@dataclass(frozen=True)
+class AdamWConfig:
+    lr: float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: float = 1.0
+    schedule: str = "cosine"         # cosine | wsd | const
+    warmup_steps: int = 100
+    total_steps: int = 10_000
+    decay_frac: float = 0.1          # WSD: final fraction spent decaying
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array                  # i32 scalar
+    m: Any                           # pytree like params
+    v: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros_like(p, dtype=jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), m=zeros,
+                      v=jax.tree.map(jnp.copy, zeros))
+
+
+def global_norm(tree) -> jax.Array:
+    sq = sum(jnp.sum(jnp.square(x.astype(jnp.float32)))
+             for x in jax.tree.leaves(tree))
+    return jnp.sqrt(sq)
+
+
+def cosine_schedule(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - cfg.warmup_steps) /
+                        max(cfg.total_steps - cfg.warmup_steps, 1), 0.0, 1.0)
+        return cfg.lr * warm * 0.5 * (1.0 + jnp.cos(math.pi * prog))
+    return fn
+
+
+def wsd_schedule(cfg: AdamWConfig) -> Callable[[jax.Array], jax.Array]:
+    """Warmup–Stable–Decay (MiniCPM, arXiv:2404.06395): linear warmup, long
+    flat stage, short (decay_frac) exponential-ish cooldown to ~0.1x."""
+    decay_start = int(cfg.total_steps * (1.0 - cfg.decay_frac))
+
+    def fn(step):
+        step = step.astype(jnp.float32)
+        warm = jnp.minimum(step / max(cfg.warmup_steps, 1), 1.0)
+        prog = jnp.clip((step - decay_start) /
+                        max(cfg.total_steps - decay_start, 1), 0.0, 1.0)
+        decay = jnp.power(0.1, prog)          # 1.0 -> 0.1 over the cooldown
+        return cfg.lr * warm * decay
+    return fn
+
+
+def make_schedule(cfg: AdamWConfig):
+    return {"cosine": cosine_schedule, "wsd": wsd_schedule,
+            "const": lambda c: (lambda s: jnp.float32(c.lr))}[cfg.schedule](cfg)
+
+
+def adamw_update(grads, state: AdamWState, params, cfg: AdamWConfig,
+                 schedule: Callable | None = None):
+    """Returns (new_params, new_state, metrics)."""
+    schedule = schedule or make_schedule(cfg)
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, cfg.clip_norm / jnp.maximum(gnorm, 1e-9))
+    step = state.step + 1
+    lr = schedule(step)
+    b1t = 1.0 - jnp.power(cfg.b1, step.astype(jnp.float32))
+    b2t = 1.0 - jnp.power(cfg.b2, step.astype(jnp.float32))
+
+    def upd(p, g, m, v):
+        g = g.astype(jnp.float32) * scale
+        m = cfg.b1 * m + (1.0 - cfg.b1) * g
+        v = cfg.b2 * v + (1.0 - cfg.b2) * jnp.square(g)
+        mhat = m / b1t
+        vhat = v / b2t
+        delta = mhat / (jnp.sqrt(vhat) + cfg.eps)
+        if p.ndim >= 2:                       # decoupled WD on matrices only
+            delta = delta + cfg.weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m, v
+
+    flat_p, treedef = jax.tree.flatten(params)
+    flat_g = treedef.flatten_up_to(grads)
+    flat_m = treedef.flatten_up_to(state.m)
+    flat_v = treedef.flatten_up_to(state.v)
+    out = [upd(p, g, m, v) for p, g, m, v in
+           zip(flat_p, flat_g, flat_m, flat_v)]
+    new_p = treedef.unflatten([o[0] for o in out])
+    new_m = treedef.unflatten([o[1] for o in out])
+    new_v = treedef.unflatten([o[2] for o in out])
+    return new_p, AdamWState(step, new_m, new_v), {
+        "grad_norm": gnorm, "lr": lr}

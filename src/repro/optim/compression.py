@@ -1,0 +1,70 @@
+"""Int8 gradient compression with error feedback, for the thin DCN pod axis.
+
+At 1000+ node scale the inter-pod (DCN) link is the gradient-reduction
+bottleneck: fp32 grads at ~25 GB/s/host dominate step time.  Quantizing the
+pod-axis all-reduce payload to int8 cuts DCN bytes 4x; error feedback keeps
+the optimizer unbiased over time (the quantization residual is re-injected
+into the next step's gradient).
+
+``ef_compress_update`` is a pure function usable inside jit/shard_map; the
+pod-axis all-reduce itself happens in ``launch.steps.make_train_step`` via a
+partial-auto shard_map over the "pod" mesh axis.
+"""
+from __future__ import annotations
+
+from typing import Any, Tuple
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def quantize_int8(x: jax.Array) -> Tuple[jax.Array, jax.Array]:
+    """Symmetric per-tensor int8 quantization. Returns (q, scale)."""
+    amax = jnp.max(jnp.abs(x.astype(jnp.float32)))
+    scale = jnp.maximum(amax, 1e-12) / 127.0
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale), -127, 127)
+    return q.astype(jnp.int8), scale
+
+
+def dequantize_int8(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def ef_compress_update(grad: jax.Array, error: jax.Array,
+                       ) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Error-feedback compression of one tensor.
+
+    Returns (q, scale, new_error) where dequant(q)*scale approximates
+    grad + error and new_error is the residual carried to the next step.
+    """
+    target = grad.astype(jnp.float32) + error
+    q, scale = quantize_int8(target)
+    deq = dequantize_int8(q, scale)
+    return q, scale, target - deq
+
+
+def psum_int8_with_ef(grads: Any, errors: Any, axis_name: str):
+    """All-reduce a gradient pytree over ``axis_name`` in int8 + EF.
+
+    Must run inside shard_map with ``axis_name`` manual.  The int8 payload is
+    summed in int32 (safe: <=256 pods fits easily), then dequantized with the
+    mean of per-pod scales — an approximation that is exact when pod scales
+    agree and whose residual lands in the error state otherwise.
+    Returns (mean_grads, new_errors).
+    """
+    n = lax.psum(1, axis_name)
+
+    def one(g, e):
+        q, scale, new_e = ef_compress_update(g, e)
+        qsum = lax.psum(q.astype(jnp.int32), axis_name)
+        ssum = lax.psum(scale, axis_name)
+        # mean over pods of dequantized grads (scale approximated by mean)
+        mean = qsum.astype(jnp.float32) * (ssum / n) / n
+        return mean.astype(g.dtype), new_e
+
+    flat_g, treedef = jax.tree.flatten(grads)
+    flat_e = treedef.flatten_up_to(errors)
+    out = [one(g, e) for g, e in zip(flat_g, flat_e)]
+    return (treedef.unflatten([o[0] for o in out]),
+            treedef.unflatten([o[1] for o in out]))

@@ -1,0 +1,90 @@
+"""Connector semantics: lifecycle, stores, copy kinds, fault wrapper."""
+import pytest
+
+from repro.core import (ConnectorCopyKind, LocalConnector, MeshConnector,
+                        ObjectStore, SimClusterConnector, serialize,
+                        deserialize)
+
+
+def test_local_lifecycle_and_services():
+    c = LocalConnector("site", {"services": {
+        "a": {"replicas": 2, "cores": 2}, "b": {"replicas": 1}}})
+    assert not c.deployed
+    c.deploy()
+    assert c.get_available_resources("a") == ["site/a/0", "site/a/1"]
+    assert c.resource_info("site/a/0").cores == 2
+    c.undeploy()
+    assert not c.deployed
+    assert c.get_available_resources("a") == []
+
+
+def test_run_executes_with_ctx():
+    c = LocalConnector("s", {"services": {"x": {"replicas": 1}}})
+    c.deploy()
+    out = c.run("s/x/0", lambda ctx: ctx["resource"], capture_output=True)
+    assert out == "s/x/0"
+    with pytest.raises(KeyError):
+        c.run("s/x/9", lambda ctx: None)
+
+
+def test_copy_three_kinds():
+    c = LocalConnector("s", {"services": {"x": {"replicas": 2}}})
+    c.deploy()
+    mgmt = ObjectStore()
+    mgmt.put("tok", serialize({"v": 42}))
+    n = c.copy("tok", "tok", ConnectorCopyKind.LOCAL_TO_REMOTE,
+               local_store=mgmt, dest_remote="s/x/0")
+    assert n > 0 and c.store("s/x/0").exists("tok")
+    c.copy("tok", "tok2", ConnectorCopyKind.REMOTE_TO_REMOTE,
+           source_remote="s/x/0", dest_remote="s/x/1")
+    assert deserialize(c.store("s/x/1").get("tok2")) == {"v": 42}
+    c.copy("tok2", "back", ConnectorCopyKind.REMOTE_TO_LOCAL,
+           source_remote="s/x/1", local_store=mgmt)
+    assert deserialize(mgmt.get("back")) == {"v": 42}
+
+
+def test_shared_store_flag():
+    c = LocalConnector("s", {"services": {"x": {"replicas": 2}},
+                             "shared_store": True})
+    c.deploy()
+    assert c.shared_data_space()
+    c.store("s/x/0").put("t", b"1")
+    assert c.store("s/x/1").exists("t")   # one data space (Occam /scratch)
+
+
+def test_mesh_connector_declared_vs_runtime():
+    c = MeshConnector("pod", {"topology": {"data": 16, "model": 16},
+                              "services": {"trainer": {"replicas": 1}}})
+    assert c.declared_chips() == 256
+    c.deploy()
+    r = c.get_available_resources("trainer")[0]
+    mesh = c.mesh(r)
+    assert mesh.devices.size >= 1          # graceful degrade on this host
+    out = c.run(r, lambda ctx: ctx["declared_topology"], capture_output=True)
+    assert out == {"data": 16, "model": 16}
+
+
+def test_clone_shares_site_state():
+    c = LocalConnector("s", {"services": {"x": {"replicas": 1}}})
+    c.deploy()
+    twin = c.clone()
+    twin.store("s/x/0").put("t", b"z")
+    assert c.store("s/x/0").exists("t")
+
+
+def test_simcluster_injects_failures_then_recovers():
+    c = SimClusterConnector("flaky", {
+        "inner": {"type": "local",
+                  "config": {"services": {"x": {"replicas": 1}}}},
+        "fail": [{"match": "/job", "attempts": [0]}]})
+    c.deploy()
+
+    class Cmd:
+        tag = "/job"
+        def __call__(self, ctx):
+            return "done"
+
+    with pytest.raises(Exception, match="injected"):
+        c.run("flaky.inner/x/0", Cmd(), capture_output=True)
+    assert c.run("flaky.inner/x/0", Cmd(), capture_output=True) == "done"
+    assert c.injected == ["fail:/job:0"]

@@ -1,0 +1,83 @@
+"""DataManager: R3 two-step baseline, R4 elision, intra-model channel."""
+import pytest
+
+from repro.core import DataManager, DeploymentManager, ModelSpec
+
+
+def _world(shared=False):
+    dm = DeploymentManager({
+        "hpc": ModelSpec("hpc", "local", {
+            "services": {"x": {"replicas": 2}}, "shared_store": shared}),
+        "cloud": ModelSpec("cloud", "local", {
+            "services": {"y": {"replicas": 1}}}),
+    })
+    dm.deploy("hpc")
+    dm.deploy("cloud")
+    return dm, DataManager(dm)
+
+
+def test_local_to_remote_counts_as_two_step():
+    dm, d = _world()
+    d.put_local("tok", [1, 2, 3])
+    rec = d.transfer_data("tok", "hpc", "hpc/x/0")
+    assert rec.kind == "two-step" and rec.bytes > 0
+    assert ("hpc/x/0", "tok") in d.locations("tok")
+
+
+def test_r4_elision_on_second_transfer():
+    dm, d = _world()
+    d.put_local("tok", list(range(100)))
+    d.transfer_data("tok", "hpc", "hpc/x/0")
+    rec = d.transfer_data("tok", "hpc", "hpc/x/0")
+    assert rec.kind == "elided"
+
+
+def test_intra_model_single_hop():
+    dm, d = _world()
+    d.put_local("tok", b"payload")
+    d.transfer_data("tok", "hpc", "hpc/x/0")
+    rec = d.transfer_data("tok", "hpc", "hpc/x/1")
+    assert rec.kind == "intra-model"        # one copy, no management relay
+
+
+def test_shared_data_space_staging_only():
+    dm, d = _world(shared=True)
+    d.put_local("tok", b"payload")
+    d.transfer_data("tok", "hpc", "hpc/x/0")
+    rec = d.transfer_data("tok", "hpc", "hpc/x/1")
+    # same store (Occam /scratch analogue): no remote movement at all
+    assert rec.kind in ("elided", "staging")
+
+
+def test_inter_model_uses_two_step_relay():
+    dm, d = _world()
+    d.put_local("tok", b"x" * 1000)
+    d.transfer_data("tok", "hpc", "hpc/x/0")
+    before = d.local_store.bytes_in
+    rec = d.transfer_data("tok", "cloud", "cloud/y/0")
+    assert rec.kind == "two-step"
+    # the relay physically passed through the management node (R3)
+    assert d.local_store.bytes_in > before
+    assert rec.bytes >= 2000                # counted both hops
+
+
+def test_collect_output_and_drop_model():
+    dm, d = _world()
+    conn = dm.get_connector("hpc")
+    from repro.core import serialize
+    conn.store("hpc/x/0").put("result", serialize({"a": 1}))
+    d.add_remote_path_mapping("hpc", "hpc/x/0", "result")
+    assert d.collect_output("result") == {"a": 1}
+    d.drop_model("hpc")
+    assert d.locations("missing") == []
+    with pytest.raises(KeyError):
+        d.transfer_data("missing", "cloud", "cloud/y/0")
+
+
+def test_transfer_summary_accounting():
+    dm, d = _world()
+    d.put_local("t1", b"1" * 100)
+    d.transfer_data("t1", "hpc", "hpc/x/0")
+    d.transfer_data("t1", "hpc", "hpc/x/0")
+    s = d.transfer_summary()
+    assert s["two-step"]["n"] == 1 and s["elided"]["n"] == 1

@@ -1,0 +1,68 @@
+"""DeploymentManager: R1 atomicity, R2 sharing, lifecycle (paper §4.5)."""
+import threading
+import time
+
+from repro.core import DeploymentManager, ModelSpec
+
+
+def _specs(**cfg):
+    return {"m": ModelSpec("m", "local", {
+        "services": {"x": {"replicas": 1}}, **cfg})}
+
+
+def test_lazy_deploy_once_under_concurrency():
+    dm = DeploymentManager(_specs(deploy_delay_s=0.05))
+    conns = []
+
+    def go():
+        conns.append(dm.deploy("m"))
+
+    threads = [threading.Thread(target=go) for _ in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    # exactly one deploy event despite 8 concurrent requests (R1/R2)
+    assert len([e for e in dm.timeline if e[1] == "deploy"]) == 1
+    assert len(conns) == 8
+    # façades share the underlying site state
+    conns[0].store("m/x/0").put("t", b"1")
+    assert conns[5].store("m/x/0").exists("t")
+
+
+def test_undeploy_all_and_redeploy():
+    dm = DeploymentManager(_specs())
+    dm.deploy("m")
+    assert dm.is_deployed("m")
+    dm.undeploy_all()
+    assert not dm.is_deployed("m")
+    c = dm.redeploy("m")
+    assert dm.is_deployed("m") and c.deployed
+
+
+def test_external_model_not_deployed_by_manager():
+    dm = DeploymentManager({"ext": ModelSpec("ext", "local", {
+        "services": {"x": {"replicas": 1}}}, external=True)})
+    conn = dm.deploy("ext")
+    # manager attached without calling deploy(): no resources exist
+    assert conn.get_available_resources("x") == []
+    dm.undeploy("ext")          # must not raise (lifecycle is external)
+
+
+def test_grace_period_undeploys_idle_models():
+    dm = DeploymentManager(_specs(), grace_period_s=0.05)
+    dm.deploy("m")
+    dm.job_started("m")
+    dm.job_finished("m")
+    assert dm.maybe_undeploy_idle() == []      # not yet idle long enough
+    time.sleep(0.08)
+    assert dm.maybe_undeploy_idle({"other"}) == ["m"]
+    assert not dm.is_deployed("m")
+
+
+def test_grace_period_respects_pending_work():
+    dm = DeploymentManager(_specs(), grace_period_s=0.01)
+    dm.deploy("m")
+    time.sleep(0.03)
+    assert dm.maybe_undeploy_idle({"m"}) == []   # queued work still needs m
+    assert dm.is_deployed("m")

@@ -1,0 +1,77 @@
+"""Executor edge cases: deadlock guard, grace-period redeploy mid-workflow."""
+import pytest
+
+from repro.core import (FaultConfig, ModelSpec, StreamFlowExecutor)
+from repro.core.streamflow_file import Binding
+from repro.core.workflow import Requirements, Step, Workflow
+
+
+def _wf_single(cores=1):
+    wf = Workflow("w")
+    wf.add_step(Step("/job", lambda i, c: {"out": 1}, {}, ("out",),
+                     requirements=Requirements(cores=cores, memory_gb=1)))
+    return wf
+
+
+def _models():
+    return {"site": ModelSpec("site", "local", {
+        "services": {"svc": {"replicas": 1, "cores": 2}}})}
+
+
+def test_deadlock_guard_raises_for_unsatisfiable_requirements():
+    ex = StreamFlowExecutor(_models(),
+                            fault=FaultConfig(speculative=False))
+    wf = _wf_single(cores=99)             # no resource ever fits
+    with pytest.raises(RuntimeError, match="deadlock"):
+        ex.run(wf, [Binding("/", "site", "svc")], {})
+    # cleanup happened despite the failure (paper §4.5 exception path)
+    assert not ex.deployment.deployments_map
+
+
+def test_grace_period_mid_workflow_redeploys_on_demand():
+    wf = Workflow("w")
+    import time
+
+    def slow(i, c):
+        time.sleep(0.25)
+        return {"t1": 1}
+
+    wf.add_step(Step("/a", slow, {}, ("t1",)))
+    wf.add_step(Step("/b", lambda i, c: {"t2": i["x"] + 1}, {"x": "t1"},
+                     ("t2",)))
+    models = {
+        "s1": ModelSpec("s1", "local", {"services": {"svc": {"replicas": 1}}}),
+        "s2": ModelSpec("s2", "local", {"services": {"svc": {"replicas": 1}}}),
+    }
+    # grace so short that s2 (deployed for nothing yet) would be reclaimed
+    ex = StreamFlowExecutor(models, grace_period_s=0.05,
+                            fault=FaultConfig(speculative=False))
+    res = ex.run(wf, [Binding("/a", "s1", "svc"),
+                      Binding("/b", "s2", "svc")], {})
+    assert res.outputs["t2"] == 2
+
+
+def test_speculative_twin_does_not_double_count_outputs():
+    import time
+
+    wf = Workflow("w")
+
+    def work(i, c):
+        time.sleep(0.05)
+        return {"out": 41}
+
+    for i in range(3):
+        wf.add_step(Step(f"/j{i}",
+                         (lambda idx: lambda i_, c: (time.sleep(0.05),
+                                                     {f"o{idx}": idx})[1])(i),
+                         {}, (f"o{i}",)))
+    models = {"site": ModelSpec("site", "local", {
+        "services": {"svc": {"replicas": 4}}})}
+    ex = StreamFlowExecutor(models, fault=FaultConfig(
+        speculative=True, straggler_factor=1.01,
+        straggler_min_samples=1, straggler_min_elapsed_s=0.0))
+    res = ex.run(wf, [Binding("/", "site", "svc")], {})
+    completed = [e for e in res.events if e.status == "completed"]
+    # exactly one completion per step even with aggressive speculation
+    assert len(completed) == 3
+    assert len({e.step for e in completed}) == 3

@@ -1,0 +1,88 @@
+"""Fault-tolerance drills: retries, dead-site redeploy, stragglers."""
+import time
+
+import pytest
+
+from repro.core import (FaultConfig, StreamFlowExecutor, ModelSpec,
+                        load_streamflow_file, DurationTracker)
+from repro.core.workflow import Step, Workflow
+
+
+def _wf(n=3, sleep=0.0):
+    wf = Workflow("w")
+    def mk(i):
+        def fn(inputs, ctx):
+            if sleep:
+                time.sleep(sleep)
+            return {f"out{i}": i}
+        return fn
+    for i in range(n):
+        wf.add_step(Step(f"/job{i}", mk(i), {}, (f"out{i}",)))
+    return wf
+
+
+def _doc(fail=None, straggle=None, n=3):
+    return {
+        "version": "v1.0",
+        "models": {"site": {"type": "simcluster", "config": {
+            "inner": {"type": "local",
+                      "config": {"services": {"svc": {"replicas": n}}}},
+            **({"fail": fail} if fail else {}),
+            **({"straggle": straggle} if straggle else {}),
+        }}},
+        "workflows": {"w": {"type": "python",
+                            "config": {"module": "tests.test_fault",
+                                       "builder": "_wf"},
+                            "bindings": [{"step": "/",
+                                          "target": {"model": "site",
+                                                     "service": "svc"}}]}},
+    }
+
+
+def _exec(doc, **fk):
+    cfg = load_streamflow_file(doc)
+    ex = StreamFlowExecutor.from_config(cfg)
+    ex.fault = FaultConfig(**fk)
+    entry = cfg.workflows["w"]
+    res = ex.run(entry.workflow, entry.bindings, {})
+    return ex, res
+
+
+def test_retry_recovers_injected_failure():
+    ex, res = _exec(_doc(fail=[{"match": "/job1", "attempts": [0]}]),
+                    max_retries=2, backoff_s=0.01, speculative=False)
+    assert res.outputs["out1"] == 1
+    failed = [e for e in res.events if e.status.startswith("failed")]
+    retried = [e for e in res.events
+               if e.step == "/job1" and e.status == "completed"]
+    assert len(failed) == 1 and retried[0].attempt == 1
+
+
+def test_exhausted_retries_raise_and_undeploy():
+    with pytest.raises(RuntimeError, match="failed after retries"):
+        _exec(_doc(fail=[{"match": "/job1", "attempts": [0, 1, 2, 3]}]),
+              max_retries=1, backoff_s=0.01, speculative=False)
+
+
+def test_straggler_speculation_first_completion_wins():
+    doc = _doc(straggle=[{"match": "/job2", "attempts": [0],
+                          "seconds": 1.2}])
+    ex, res = _exec(doc, speculative=True, straggler_factor=2.0,
+                    straggler_min_samples=1, straggler_min_elapsed_s=0.05,
+                    max_retries=1)
+    done2 = [e for e in res.events
+             if e.step == "/job2" and e.status == "completed"]
+    assert len(done2) == 1
+    assert done2[0].speculative              # the twin won the race
+    assert res.wall_seconds < 1.2            # didn't wait out the straggler
+
+
+def test_duration_tracker_median_logic():
+    t = DurationTracker()
+    cfg = FaultConfig(straggler_factor=3.0, straggler_min_samples=2,
+                      straggler_min_elapsed_s=0.0)
+    assert not t.is_straggler("svc", 100.0, cfg)     # no samples yet
+    t.record("svc", 1.0)
+    t.record("svc", 1.2)
+    assert t.is_straggler("svc", 4.0, cfg)
+    assert not t.is_straggler("svc", 2.0, cfg)

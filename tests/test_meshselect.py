@@ -1,0 +1,35 @@
+"""Per-(arch x shape) mesh selection table (§Perf findings as a feature)."""
+from repro.configs import get_arch
+from repro.distributed.meshselect import preferred_mesh
+from repro.models.config import SHAPES_BY_NAME
+
+
+def test_table_entries_respect_divisibility():
+    for arch, shape, want in [
+        ("minicpm-2b", "train_4k", (64, 4, "base")),
+        ("deepseek-coder-33b", "train_4k", (32, 8, "base")),
+        ("mixtral-8x7b", "train_4k", (32, 8, "ep")),
+        ("granite-moe-3b-a800m", "train_4k", (32, 8, "ep")),
+        ("xlstm-1.3b", "train_4k", (16, 16, "base")),       # default
+    ]:
+        got = preferred_mesh(get_arch(arch), SHAPES_BY_NAME[shape])
+        assert got == want, (arch, shape, got)
+        assert got[0] * got[1] == 256
+
+
+def test_batch_guard_degrades_dp():
+    # prefill_32k has global_batch=32: minicpm's train mesh (dp=64) must
+    # NOT be applied (the §4.3d refutation) — falls back to default
+    got = preferred_mesh(get_arch("minicpm-2b"),
+                         SHAPES_BY_NAME["prefill_32k"])
+    assert SHAPES_BY_NAME["prefill_32k"].global_batch % got[0] == 0
+    # deepseek prefill entry respects batch=32 with dp=32
+    got = preferred_mesh(get_arch("deepseek-coder-33b"),
+                         SHAPES_BY_NAME["prefill_32k"])
+    assert got == (32, 8, "base")
+
+
+def test_decode_defaults():
+    got = preferred_mesh(get_arch("mixtral-8x7b"),
+                         SHAPES_BY_NAME["decode_32k"])
+    assert got[0] * got[1] == 256

@@ -1,0 +1,144 @@
+"""Per-arch smoke tests (deliverable f) + decode-path consistency."""
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.configs import ARCH_IDS, get_arch
+from repro.models import registry as R
+from repro.models.config import applicable_shapes, SHAPES_BY_NAME
+
+RNG = jax.random.key(0)
+
+
+def _batch(cfg, B, S, key=RNG):
+    k1, k2, k3 = jax.random.split(key, 3)
+    batch = {}
+    if cfg.modality == "audio":
+        batch["frames"] = jax.random.normal(
+            k1, (B, S, cfg.frontend_dim), jnp.bfloat16)
+        batch["labels"] = jax.random.randint(k2, (B, S), 0, cfg.vocab_size)
+        batch["mask"] = (jax.random.uniform(k3, (B, S)) < 0.3).astype(
+            jnp.float32)
+    else:
+        batch["tokens"] = jax.random.randint(k1, (B, S), 0, cfg.vocab_size)
+        batch["labels"] = jax.random.randint(k2, (B, S), 0, cfg.vocab_size)
+    if cfg.modality == "vision":
+        batch["patches"] = jax.random.normal(
+            k3, (B, cfg.n_patches, cfg.frontend_dim), jnp.bfloat16)
+    return batch
+
+
+@pytest.mark.parametrize("arch", ARCH_IDS)
+def test_smoke_forward_and_train_step(arch):
+    """Reduced config: one forward/train step, shape + finiteness checks."""
+    cfg = get_arch(arch).reduced()
+    B, S = 2, 64
+    params, axes = R.init_params(RNG, cfg)
+    # axes mirror params leaf-for-leaf
+    assert (jax.tree.structure(jax.tree.map(lambda *_: 0, params)) ==
+            jax.tree.structure(jax.tree.map(
+                lambda *_: 0, axes,
+                is_leaf=lambda t: isinstance(t, tuple))))
+    batch = _batch(cfg, B, S)
+    logits = R.forward_logits(params, cfg, batch)
+    assert logits.shape == (B, S, cfg.vocab_size)
+    assert bool(jnp.all(jnp.isfinite(logits.astype(jnp.float32))))
+
+    from repro.launch.steps import make_train_step
+    from repro.optim import adamw_init
+    step = jax.jit(make_train_step(cfg))
+    params2, opt2, metrics = step(params, adamw_init(params), batch)
+    assert np.isfinite(float(metrics["loss"]))
+    assert np.isfinite(float(metrics["grad_norm"]))
+    # params actually moved
+    moved = jax.tree.map(
+        lambda a, b: float(jnp.max(jnp.abs(a - b))), params, params2)
+    assert max(jax.tree.leaves(moved)) > 0
+
+
+@pytest.mark.parametrize("arch", ["minicpm-2b", "mixtral-8x7b",
+                                  "recurrentgemma-9b", "xlstm-1.3b",
+                                  "llama-3.2-vision-11b"])
+def test_decode_matches_full_forward(arch):
+    cfg = get_arch(arch).reduced()
+    if cfg.is_moe:
+        # decode-vs-full equality only holds in the no-drop regime: capacity
+        # bucketing depends on the token-group size, which differs between
+        # the full pass and prefill/decode
+        import dataclasses
+        cfg = dataclasses.replace(cfg, capacity_factor=8.0)
+    B, S = 2, 32
+    params, _ = R.init_params(RNG, cfg)
+    batch = _batch(cfg, B, S)
+    batch.pop("labels", None)
+    batch.pop("mask", None)
+    full = R.forward_logits(params, cfg, batch)
+    pb = dict(batch)
+    pb["tokens"] = batch["tokens"][:, : S - 4]
+    logits, cache = R.prefill(params, cfg, pb, cache_len=S)
+    err = float(jnp.max(jnp.abs(
+        logits.astype(jnp.float32) - full[:, S - 5].astype(jnp.float32))))
+    for t in range(S - 4, S - 1):
+        logits, cache = R.decode_step(
+            params, cfg, batch["tokens"][:, t:t + 1], jnp.int32(t), cache)
+        err = max(err, float(jnp.max(jnp.abs(
+            logits.astype(jnp.float32) - full[:, t].astype(jnp.float32)))))
+    assert err < 0.08, err
+
+
+def test_encoder_only_has_no_decode():
+    cfg = get_arch("hubert-xlarge").reduced()
+    params, _ = R.init_params(RNG, cfg)
+    with pytest.raises(ValueError, match="encoder-only"):
+        R.decode_step(params, cfg, jnp.zeros((1, 1), jnp.int32),
+                      jnp.int32(0), {})
+
+
+def test_applicable_shapes_match_assignment():
+    expect_cells = 0
+    for arch in ARCH_IDS:
+        cfg = get_arch(arch)
+        names = {s.name for s in applicable_shapes(cfg)}
+        if arch == "hubert-xlarge":
+            assert names == {"train_4k", "prefill_32k"}
+        if arch in ("minicpm-2b", "deepseek-coder-33b", "minitron-8b",
+                    "llama-3.2-vision-11b", "granite-moe-3b-a800m"):
+            assert "long_500k" not in names
+        if arch in ("xlstm-1.3b", "recurrentgemma-9b", "mixtral-8x7b",
+                    "h2o-danube-3-4b"):
+            assert "long_500k" in names
+        expect_cells += len(names)
+    assert expect_cells == 33                # 40 assigned - 7 documented skips
+
+
+def test_param_counts_in_expected_range():
+    expect = {"deepseek-coder-33b": (30e9, 36e9),
+              "mixtral-8x7b": (44e9, 49e9),
+              "minicpm-2b": (2.4e9, 3.0e9),
+              "hubert-xlarge": (0.8e9, 1.1e9)}
+    for arch, (lo, hi) in expect.items():
+        n = R.count_params_analytic(get_arch(arch))
+        assert lo <= n <= hi, (arch, n)
+    active = R.count_params_analytic(get_arch("mixtral-8x7b"),
+                                     active_only=True)
+    assert 11e9 <= active <= 14e9
+
+
+def test_tied_embeddings_share_table():
+    cfg = get_arch("minicpm-2b").reduced()
+    params, _ = R.init_params(RNG, cfg)
+    assert "head" not in params and "embed" in params
+
+
+def test_moe_gather_matches_einsum_dispatch():
+    cfg = get_arch("mixtral-8x7b").reduced()
+    params, _ = R.init_params(RNG, cfg)
+    batch = _batch(cfg, 2, 64)
+    a = R.forward_logits(params, cfg, batch, moe_dispatch="einsum")
+    b = R.forward_logits(params, cfg, batch, moe_dispatch="gather")
+    # same top-k routing; capacity ordering may drop different overflow
+    # tokens, so allow small deviation
+    diff = float(jnp.mean(jnp.abs(a.astype(jnp.float32) -
+                                  b.astype(jnp.float32))))
+    assert diff < 0.05, diff

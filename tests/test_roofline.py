@@ -1,0 +1,67 @@
+"""Roofline aggregator unit tests (launch/roofline.py)."""
+import json
+import os
+
+from repro.launch.roofline import advice, fmt_row, load_records, markdown_table
+
+
+def _rec(**kw):
+    base = {
+        "arch": "a", "shape": "train_4k", "multi_pod": False,
+        "memory": {"temp_size_in_bytes": 8 * 2**30},
+        "hlo": {"collective_wire_bytes": {"all-gather": 100.0}},
+        "roofline": {"compute_s": 1.0, "memory_s": 2.0, "collective_s": 0.5,
+                     "dominant": "memory", "useful_ratio": 0.5,
+                     "roofline_frac": 0.1, "model_flops": 1e15,
+                     "hlo_flops_global": 2e15, "bound_s": 2.0},
+    }
+    base.update(kw)
+    return base
+
+
+def test_fmt_row_fits_flag():
+    row = fmt_row(_rec())
+    assert row["fits"] == "Y" and row["dom"] == "memory"
+    over = _rec(memory={"temp_size_in_bytes": 64 * 2**30})
+    assert fmt_row(over)["fits"] == "OVER"
+
+
+def test_markdown_table_shape():
+    rows = [fmt_row(_rec()), fmt_row(_rec(arch="b"))]
+    md = markdown_table(rows)
+    lines = md.splitlines()
+    assert lines[0].startswith("| arch |")
+    assert len(lines) == 2 + 2
+
+
+def test_advice_covers_each_dominant_term():
+    assert "shard the" in advice(_rec(roofline={
+        **_rec()["roofline"], "dominant": "memory", "useful_ratio": 0.1}))
+    assert "all-gather" in advice(_rec(roofline={
+        **_rec()["roofline"], "dominant": "collective"}))
+    assert "replicated" in advice(_rec(roofline={
+        **_rec()["roofline"], "dominant": "compute", "useful_ratio": 0.2}))
+    assert "roof" in advice(_rec(roofline={
+        **_rec()["roofline"], "dominant": "compute", "useful_ratio": 0.9}))
+
+
+def test_load_records_filters_by_suffix(tmp_path):
+    a = _rec()
+    with open(tmp_path / "a__train_4k__pod1.json", "w") as f:
+        json.dump(a, f)
+    with open(tmp_path / "a__train_4k__pod1__variant.json", "w") as f:
+        json.dump(_rec(arch="variant"), f)
+    base = load_records(str(tmp_path), "")
+    var = load_records(str(tmp_path), "variant")
+    assert len(base) == 1 and base[0]["arch"] == "a"
+    assert len(var) == 1 and var[0]["arch"] == "variant"
+
+
+def test_real_sweep_artifacts_parse_if_present():
+    d = "experiments/dryrun_opt"
+    if not os.path.isdir(d):
+        return
+    recs = load_records(d, "")
+    ok = [r for r in recs if "roofline" in r]
+    assert len(ok) >= 60              # 33 cells x 2 meshes
+    assert all("dominant" in r["roofline"] for r in ok)

@@ -1,0 +1,45 @@
+"""StreamFlow-file parsing + schema validation (paper §4.3)."""
+import pytest
+
+from repro.core import StreamFlowFileError, load_streamflow_file, validate
+from repro.configs.paper_pipeline import (streamflow_doc_full_hpc,
+                                          streamflow_doc_hybrid)
+
+
+def test_canonical_docs_validate():
+    for doc in (streamflow_doc_full_hpc(2), streamflow_doc_hybrid(2)):
+        validate(doc)
+        cfg = load_streamflow_file(doc)
+        assert "single-cell" in cfg.workflows
+        wf = cfg.workflows["single-cell"].workflow
+        assert len(wf.steps) == 1 + 3 * 2
+
+
+def test_yaml_string_roundtrip():
+    import yaml
+    doc = streamflow_doc_hybrid(2)
+    cfg = load_streamflow_file(yaml.safe_dump(doc))
+    assert set(cfg.models) == {"occam", "garr_cloud"}
+    assert cfg.policy == "data_locality"
+
+
+@pytest.mark.parametrize("mutate,msg", [
+    (lambda d: d.pop("version"), "version"),
+    (lambda d: d.update(version="v2.0"), "not one of"),
+    (lambda d: d["models"]["occam"].update(type="k8s"), "not one of"),
+    (lambda d: d["workflows"]["single-cell"].pop("bindings"), "bindings"),
+    (lambda d: d["workflows"]["single-cell"]["bindings"][0].pop("target"),
+     "target"),
+])
+def test_schema_rejections(mutate, msg):
+    doc = streamflow_doc_full_hpc(2)
+    mutate(doc)
+    with pytest.raises(StreamFlowFileError, match=msg):
+        load_streamflow_file(doc)
+
+
+def test_binding_to_unknown_model_rejected():
+    doc = streamflow_doc_full_hpc(2)
+    doc["workflows"]["single-cell"]["bindings"][0]["target"]["model"] = "nope"
+    with pytest.raises(StreamFlowFileError, match="unknown model"):
+        load_streamflow_file(doc)

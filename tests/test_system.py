@@ -1,0 +1,70 @@
+"""End-to-end behaviour of the paper's system: both experiment shapes run
+through the real executor with real (tiny) JAX training steps inside."""
+import pytest
+
+from repro.core import StreamFlowExecutor, load_streamflow_file
+from repro.configs.paper_pipeline import (build_workflow,
+                                          streamflow_doc_full_hpc,
+                                          streamflow_doc_hybrid)
+
+ARGS = dict(n_chains=2, train_steps=2, rows_per_chain=8, seq_len=64,
+            batch=4, vocab=128, d_model=32)
+
+
+def _run(doc):
+    cfg = load_streamflow_file(doc)
+    ex = StreamFlowExecutor.from_config(cfg)
+    entry = cfg.workflows["single-cell"]
+    res = ex.run(entry.workflow, entry.bindings, inputs={"seed": 0})
+    return ex, res
+
+
+def test_full_hpc_run_produces_labels():
+    ex, res = _run(streamflow_doc_full_hpc(**ARGS))
+    assert {"labels0", "labels1"} <= set(res.outputs)
+    assert all(len(r) == 7 for r in res.timeline_rows())
+    # every step completed exactly once
+    done = [e for e in res.events if e.status == "completed"]
+    assert len(done) == 1 + 3 * 2
+    # shared store => intra-site movements are elided (R4)
+    kinds = ex.data.transfer_summary()
+    assert kinds.get("elided", {}).get("n", 0) >= 4
+
+
+def test_hybrid_run_crosses_sites_via_two_step():
+    ex, res = _run(streamflow_doc_hybrid(**ARGS))
+    assert {"labels0", "labels1"} <= set(res.outputs)
+    kinds = ex.data.transfer_summary()
+    # models trained on HPC feed seurat on the cloud: two-step copies (R3)
+    assert kinds["two-step"]["n"] >= 3
+    # deployments were cleaned up at the end (paper §4.5)
+    assert not ex.deployment.deployments_map
+
+
+def test_training_inside_workflow_learns():
+    ex, res = _run(streamflow_doc_full_hpc(
+        n_chains=1, train_steps=8, rows_per_chain=16, seq_len=64,
+        batch=8, vocab=128, d_model=32))
+    losses = res.outputs["stats0"]["losses"]
+    assert losses[-1] < losses[0]            # the heavy step really trains
+
+
+def test_missing_input_raises():
+    doc = streamflow_doc_full_hpc(**ARGS)
+    cfg = load_streamflow_file(doc)
+    ex = StreamFlowExecutor.from_config(cfg)
+    entry = cfg.workflows["single-cell"]
+    with pytest.raises(ValueError, match="missing workflow inputs"):
+        ex.run(entry.workflow, entry.bindings, inputs={})
+
+
+def test_unbound_step_raises():
+    doc = streamflow_doc_full_hpc(**ARGS)
+    doc["workflows"]["single-cell"]["bindings"] = [
+        {"step": "/mkfastq",
+         "target": {"model": "occam", "service": "cellranger"}}]
+    cfg = load_streamflow_file(doc)
+    ex = StreamFlowExecutor.from_config(cfg)
+    entry = cfg.workflows["single-cell"]
+    with pytest.raises(Exception):
+        ex.run(entry.workflow, entry.bindings, inputs={"seed": 0})

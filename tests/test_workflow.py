@@ -1,0 +1,66 @@
+"""Workflow DAG + binding-resolution unit tests (paper §4.3)."""
+import pytest
+
+from repro.core import Step, Workflow, match_binding
+
+
+def _step(path, inputs=None, outputs=()):
+    return Step(path, fn=lambda i, c: {t: 1 for t in outputs},
+                inputs=inputs or {}, outputs=tuple(outputs))
+
+
+def diamond():
+    wf = Workflow("d")
+    wf.add_step(_step("/a", {}, ["t1"]))
+    wf.add_step(_step("/b", {"x": "t1"}, ["t2"]))
+    wf.add_step(_step("/c", {"x": "t1"}, ["t3"]))
+    wf.add_step(_step("/d", {"l": "t2", "r": "t3"}, ["t4"]))
+    return wf
+
+
+def test_predecessors_successors():
+    wf = diamond()
+    assert wf.predecessors("/d") == ["/b", "/c"]
+    assert set(wf.successors("/a")) == {"/b", "/c"}
+    assert wf.final_outputs() == ["t4"]
+    assert wf.external_inputs() == []
+
+
+def test_duplicate_path_and_token_rejected():
+    wf = Workflow("x")
+    wf.add_step(_step("/a", {}, ["t"]))
+    with pytest.raises(ValueError):
+        wf.add_step(_step("/a", {}, ["u"]))
+    with pytest.raises(ValueError):
+        wf.add_step(_step("/b", {}, ["t"]))
+
+
+def test_cycle_detection():
+    wf = Workflow("c")
+    wf.add_step(_step("/a", {"x": "t2"}, ["t1"]))
+    wf.add_step(_step("/b", {"x": "t1"}, ["t2"]))
+    with pytest.raises(ValueError, match="cycle"):
+        wf.validate()
+
+
+def test_fireable_is_fcfs_ordered():
+    wf = diamond()
+    assert wf.fireable([], []) == ["/a"]
+    assert wf.fireable(["t1"], ["/a"]) == ["/b", "/c"]
+    assert wf.fireable(["t1", "t2", "t3"], ["/a", "/b", "/c"]) == ["/d"]
+
+
+def test_relative_or_unnormalised_paths_rejected():
+    with pytest.raises(ValueError):
+        _step("a")
+    with pytest.raises(ValueError):
+        _step("/a/../b")
+
+
+def test_match_binding_deepest_wins():
+    paths = ["/", "/chains", "/chains/2", "/chains/2/count"]
+    assert match_binding("/chains/2/count", paths) == "/chains/2/count"
+    assert match_binding("/chains/2/seurat", paths) == "/chains/2"
+    assert match_binding("/chains/5/count", paths) == "/chains"
+    assert match_binding("/mkfastq", paths) == "/"
+    assert match_binding("/x", ["/y"]) is None
