@@ -19,7 +19,8 @@ def warmup():
     if _WARM:
         return
     from repro.configs.paper_pipeline import (streamflow_doc_full_hpc,
-                                              streamflow_doc_hybrid)
+                                              streamflow_doc_hybrid,
+                                              streamflow_doc_single_service)
     # keep tensor shapes identical to WF_ARGS so every jit cache is hot,
     # and warm BOTH execution contexts (mesh site and local site) — the
     # jit cache keys on the ambient mesh
@@ -28,14 +29,18 @@ def warmup():
     args = {**WF_ARGS, "n_chains": 1}
     run_doc(streamflow_doc_full_hpc(**args))
     run_doc(streamflow_doc_hybrid(**args))
+    # the single-service pool runs the *train* step on the local context,
+    # which the two docs above never warm — without this, whichever policy
+    # ran first was charged ~30s of jit compile
+    run_doc(streamflow_doc_single_service(**args))
     _WARM = True
 
 
-def run_doc(doc, *, policy=None, fault=None):
+def run_doc(doc, *, policy=None, fault=None, **executor_kw):
     cfg = load_streamflow_file(doc)
     if policy:
         cfg.policy = policy
-    ex = StreamFlowExecutor.from_config(cfg)
+    ex = StreamFlowExecutor.from_config(cfg, **executor_kw)
     if fault is not None:
         ex.fault = fault
     name, entry = next(iter(cfg.workflows.items()))

@@ -18,7 +18,7 @@ def _timed(fn, *a, **kw):
 
 def main() -> None:
     from benchmarks import (bench_timeline, bench_transfer, bench_scheduler,
-                            bench_deployment, bench_fault)
+                            bench_deployment, bench_fault, bench_pipeline)
     rows = []
 
     print("=" * 72)
@@ -60,6 +60,15 @@ def main() -> None:
     out, us = _timed(bench_fault.run)
     rows.append(("fault_drills", us,
                  ";".join(f"{r['scenario']}={r['wall_s']}" for r in out)))
+
+    print("\n" + "=" * 72)
+    print("bench_pipeline — serialized FCFS vs pipelined executor")
+    print("=" * 72)
+    out, us = _timed(bench_pipeline.run)
+    fig9 = {r["mode"]: r for r in out if r["topology"] == "fig9"}
+    rows.append(("pipeline_makespan", us,
+                 f"serial={fig9['serialized-fcfs']['makespan_s']}s;"
+                 f"pipelined={fig9['pipelined']['makespan_s']}s"))
 
     print("\n" + "=" * 72)
     print("name,us_per_call,derived")

@@ -14,7 +14,8 @@ from repro.core.connectors import (LocalConnector, MeshConnector,
 from repro.core.deployment import DeploymentManager, ModelSpec
 from repro.core.scheduler import (Scheduler, Policy, DataLocalityPolicy,
                                   RoundRobinPolicy, LoadBalancePolicy,
-                                  BackfillPolicy, JobDescription,
+                                  BackfillPolicy, LocalityBatchPolicy,
+                                  WidestFirstPolicy, JobDescription,
                                   JobAllocation, ResourceAllocation,
                                   JobStatus, POLICIES)
 from repro.core.datamanager import DataManager, TransferRecord

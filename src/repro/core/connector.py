@@ -134,17 +134,32 @@ class Connector(abc.ABC):
         src/dst are store paths (token keys).  ``source_remote`` /
         ``dest_remote`` name resources for the remote ends;
         ``local_store`` is the management node's store.
+
+        Config may declare a simulated WAN link between this site and the
+        management node (``link_latency_s`` per copy + ``link_bandwidth_mbps``)
+        so cross-site hops have real, measurable cost — this is what the
+        pipelined executor overlaps with compute.
         """
         if kind is ConnectorCopyKind.LOCAL_TO_REMOTE:
             payload = local_store.get(src)
+            self._link_delay(len(payload))
             self.store(dest_remote).put(dst, payload)
         elif kind is ConnectorCopyKind.REMOTE_TO_LOCAL:
             payload = self.store(source_remote).get(src)
+            self._link_delay(len(payload))
             local_store.put(dst, payload)
         else:  # REMOTE_TO_REMOTE within this model
             payload = self.store(source_remote).get(src)
             self.store(dest_remote).put(dst, payload)
         return len(payload)
+
+    def _link_delay(self, n_bytes: int):
+        """Sleep out the declared management-node link cost (0 by default)."""
+        latency = float(self.config.get("link_latency_s", 0.0))
+        mbps = float(self.config.get("link_bandwidth_mbps", 0.0))
+        delay = latency + (n_bytes * 8 / (mbps * 1e6) if mbps > 0 else 0.0)
+        if delay > 0:
+            time.sleep(delay)
 
     def services(self) -> List[str]:
         """Service names this model exposes (wrappers may delegate)."""

@@ -9,6 +9,12 @@ R4 — transfers are elided when the token is already present at the target;
 a cheap local *staging* copy is still made (the paper does the same so
 in-place modifications can't corrupt inputs).
 
+Beyond-paper (flagged): the pipelined executor issues transfers
+*asynchronously* — ``transfer_data_async`` returns a Future so token
+movement for step N+1 overlaps compute of step N.  In-flight transfers are
+deduplicated per (token, destination): two consumers of one token trigger
+one physical copy, the second rides the first's Future.
+
 Every movement is appended to ``transfers`` — the benchmark harness reads
 this log to produce the paper's overhead accounting.
 """
@@ -16,6 +22,7 @@ from __future__ import annotations
 
 import threading
 import time
+from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
@@ -41,13 +48,23 @@ class _Location:
 
 
 class DataManager:
-    def __init__(self, deployment_manager, scheduler=None):
+    def __init__(self, deployment_manager, scheduler=None, *,
+                 transfer_workers: int = 8):
         self.deployment_manager = deployment_manager
         self.scheduler = scheduler
         self._lock = threading.RLock()
         self.remote_paths: Dict[str, List[_Location]] = {}
         self.local_store = ObjectStore()           # the management node
         self.transfers: List[TransferRecord] = []
+        self._transfer_workers = transfer_workers
+        self._xfer_pool: Optional[ThreadPoolExecutor] = None
+        # (token, dst_model, dst_resource) -> Future of the copy in flight
+        self._inflight: Dict[Tuple[str, str, str], Future] = {}
+        self.dedup_hits = 0                        # consumers served by an
+                                                   # already-in-flight copy
+        # bumped by drop_model: fences in-flight transfers so a copy that
+        # lands after its site died can't register a stale replica
+        self._model_epoch: Dict[str, int] = {}
 
     # -- registry ---------------------------------------------------------------
     def add_remote_path_mapping(self, model: str, resource: str,
@@ -64,9 +81,20 @@ class DataManager:
             return [(l.resource, l.path) for l in
                     self.remote_paths.get(token, [])]
 
-    def drop_model(self, model: str):
-        """A site died/undeployed: forget every token replica it held."""
+    def has_replica(self, token: str, model: str) -> bool:
         with self._lock:
+            return any(l.model == model
+                       for l in self.remote_paths.get(token, []))
+
+    def drop_model(self, model: str):
+        """A site died/undeployed: forget every token replica it held and
+        fence any transfer still in flight toward it."""
+        with self._lock:
+            self._model_epoch[model] = self._model_epoch.get(model, 0) + 1
+            # purge the dedup map too: a consumer arriving after a redeploy
+            # must trigger a fresh copy, not join a doomed pre-drop future
+            for key in [k for k in self._inflight if k[1] == model]:
+                self._inflight.pop(key, None)
             for token in list(self.remote_paths):
                 self.remote_paths[token] = [
                     l for l in self.remote_paths[token] if l.model != model]
@@ -103,6 +131,7 @@ class DataManager:
         dst_store = dst_conn.store(dst_resource)
         with self._lock:
             locs = list(self.remote_paths.get(token, []))
+            epoch = self._model_epoch.get(dst_model, 0)
 
         # R4: already present at the destination store?
         present = dst_store.exists(token) or any(
@@ -116,7 +145,7 @@ class DataManager:
             rec = TransferRecord(token, "elided" if present else "staging",
                                  None, f"{dst_model}:{dst_resource}",
                                  size, time.time() - t0)
-            self._done(rec, dst_model, dst_resource, token)
+            self._done(rec, dst_model, dst_resource, token, epoch)
             return rec
 
         # source pick: management node, else first registered replica
@@ -127,11 +156,13 @@ class DataManager:
             rec = TransferRecord(token, "two-step", "management",
                                  f"{dst_model}:{dst_resource}",
                                  payload_len, time.time() - t0)
-            self._done(rec, dst_model, dst_resource, token)
+            self._done(rec, dst_model, dst_resource, token, epoch)
             return rec
         if not locs:
             raise KeyError(f"token {token!r} exists nowhere")
-        src = locs[0]
+        # prefer a same-model replica: a staged-in copy on a sibling
+        # resource turns this into a LAN hop instead of a second WAN copy
+        src = next((l for l in locs if l.model == dst_model), locs[0])
         src_conn = self.deployment_manager.get_connector(src.model)
 
         if src.model == dst_model:
@@ -158,14 +189,65 @@ class DataManager:
                                  f"{src.model}:{src.resource}",
                                  f"{dst_model}:{dst_resource}", n1 + n2,
                                  time.time() - t0)
-        self._done(rec, dst_model, dst_resource, token)
+        self._done(rec, dst_model, dst_resource, token, epoch)
         return rec
 
     def _done(self, rec: TransferRecord, model: str, resource: str,
-              token: str):
+              token: str, epoch: int):
         with self._lock:
             self.transfers.append(rec)
+            if epoch != self._model_epoch.get(model, 0):
+                return          # site dropped mid-flight: don't register a
+                                # replica the redeployed store doesn't hold
         self.add_remote_path_mapping(model, resource, token)
+
+    # -- async transfer plane (pipelined executor) -------------------------------
+    def _pool(self) -> ThreadPoolExecutor:
+        with self._lock:
+            if self._xfer_pool is None:
+                self._xfer_pool = ThreadPoolExecutor(
+                    max_workers=self._transfer_workers,
+                    thread_name_prefix="sf-xfer")
+            return self._xfer_pool
+
+    def transfer_data_async(self, token: str, dst_model: str,
+                            dst_resource: str) -> Future:
+        """Issue (or join) an asynchronous transfer of ``token`` to the
+        destination.  One physical copy per (token, destination) is in
+        flight at a time — concurrent consumers share the same Future."""
+        key = (token, dst_model, dst_resource)
+        with self._lock:
+            fut = self._inflight.get(key)
+            if fut is not None:
+                self.dedup_hits += 1
+                return fut
+            fut = self._pool().submit(self.transfer_data, token,
+                                      dst_model, dst_resource)
+            self._inflight[key] = fut
+
+        def _clear(f, key=key):
+            with self._lock:
+                # drop_model may have purged the key and a newer transfer
+                # installed its own future — only evict our own entry
+                if self._inflight.get(key) is f:
+                    del self._inflight[key]
+        fut.add_done_callback(_clear)
+        return fut
+
+    def prefetch(self, tokens, dst_model: str, dst_resource: str
+                 ) -> List[Future]:
+        """Start moving every token toward a freshly-scheduled step's
+        resource; returns the futures the worker must await before it runs."""
+        return [self.transfer_data_async(t, dst_model, dst_resource)
+                for t in tokens]
+
+    def close(self):
+        """Drain the transfer pool (end-of-run cleanup)."""
+        with self._lock:
+            pool, self._xfer_pool = self._xfer_pool, None
+            self._inflight.clear()
+        if pool is not None:
+            pool.shutdown(wait=True, cancel_futures=True)
 
     # -- output retrieval --------------------------------------------------------
     def collect_output(self, token: str) -> Any:

@@ -1,6 +1,25 @@
 """StreamFlow executor: the event loop driving a workflow across sites.
 
-Per iteration (the paper's FCFS loop, §4.4/§4.5):
+Two dispatch modes share one loop body:
+
+``pipelined=True`` (default, beyond-paper): an event-driven pipelined
+executor.  Per tick the *whole* ready queue is handed to the Scheduler
+(``schedule_batch``) so queue-aware policies (backfill, locality-batch,
+widest-first) see every fireable step before any placement commits; input
+tokens for placed steps move asynchronously through the DataManager
+(per-token in-flight dedup) so token movement for step N+1 overlaps compute
+of step N; steps that could not get a worker slot have their inputs
+*staged in* to the target site ahead of time, so the expensive cross-site
+hop is already paid when a slot frees.  Completion callbacks wake the loop
+instead of sleep-polling, and retry backoff is deferred (never blocks
+dispatch of unrelated work).
+
+``pipelined=False``: the paper's serialized FCFS loop (§4.4/§4.5), kept as
+the measured baseline — one ``Scheduler.schedule`` call per queued step,
+synchronous transfers inside the worker, sleep-polling.  Used by
+``benchmarks/bench_pipeline.py`` to quantify the pipelining win.
+
+Per iteration (both modes):
   1. fireable steps (all input tokens available) join the waiting queue;
   2. each queued step resolves its binding (deepest path wins), lazily
      deploys its model (R1), and asks the Scheduler for a resource;
@@ -93,16 +112,25 @@ class StreamFlowExecutor:
                  policy: str = "data_locality",
                  grace_period_s: Optional[float] = None,
                  fault: Optional[FaultConfig] = None,
-                 max_workers: int = 16):
+                 max_workers: int = 16,
+                 pipelined: bool = True,
+                 transfer_workers: int = 8,
+                 prefetch_depth: int = 8,
+                 deadlock_timeout_s: float = 2.0):
         self.deployment = DeploymentManager(models,
                                             grace_period_s=grace_period_s)
         self.scheduler = Scheduler(POLICIES[policy]())
-        self.data = DataManager(self.deployment, self.scheduler)
+        self.data = DataManager(self.deployment, self.scheduler,
+                                transfer_workers=transfer_workers)
         self.fault = fault or FaultConfig()
         self.durations = DurationTracker()
         self.max_workers = max_workers
+        self.pipelined = pipelined
+        self.prefetch_depth = prefetch_depth
+        self.deadlock_timeout_s = deadlock_timeout_s
         self.events: List[JobEvent] = []
         self._ev_lock = threading.Lock()
+        self._wake = threading.Event()
 
     @classmethod
     def from_config(cls, cfg: StreamFlowConfig, **kw) -> "StreamFlowExecutor":
@@ -156,51 +184,78 @@ class StreamFlowExecutor:
         completed: set = set()
         running: Dict[str, dict] = {}          # step path -> job record
         waiting: List[str] = []
+        retries: List[dict] = []               # {rec, path, retry_at}
         failed_final: Dict[str, Exception] = {}
 
         pool = ThreadPoolExecutor(max_workers=self.max_workers)
         self._pool = pool
-        stall = 0
+        self._wake.clear()
+        starving_since: Optional[float] = None
         try:
             while len(completed) < len(workflow.steps):
                 if failed_final:
                     step, err = next(iter(failed_final.items()))
                     raise RuntimeError(
                         f"step {step} failed after retries") from err
-                # 1. enqueue newly fireable steps (FCFS)
-                for path in workflow.fireable(sorted(done_tokens),
-                                              list(running) + list(completed)
-                                              + waiting):
+                # 1. enqueue newly fireable steps (FCFS arrival order)
+                started = (list(running) + list(completed) + waiting
+                           + [r["path"] for r in retries])
+                for path in workflow.fireable(sorted(done_tokens), started):
                     waiting.append(path)
-                # 2. try to schedule the queue
+                # 2. launch retries whose backoff deadline passed (a step
+                # whose speculative twin finished during the backoff is
+                # already complete — don't re-execute it)
+                now = time.time()
+                due, pending = [], []
+                for r in retries:
+                    if r["path"] in completed:
+                        continue
+                    (due if r["retry_at"] <= now else pending).append(r)
+                retries = pending
+                for r in due:
+                    self._retry(r["rec"], r["path"], running)
+                # 3. schedule the queue (whole-queue batch when pipelined)
                 waiting = self._schedule_queue(
                     workflow, bindings, waiting, running, pool)
-                # 3. straggler speculation
+                # 4. straggler speculation
                 if self.fault.speculative:
                     self._maybe_speculate(workflow, bindings, running, pool)
-                # 4. harvest completions
+                # 5. harvest completions (failures defer into ``retries``)
                 progressed = self._harvest(running, completed, done_tokens,
-                                           failed_final)
-                # 5. grace-period undeploy (beyond-paper)
+                                           failed_final, retries)
+                # 6. grace-period undeploy (beyond-paper)
+                pending = waiting + list(running) + [r["path"]
+                                                    for r in retries]
                 pending_models = {
-                    self._resolve_binding(p, bindings).model
-                    for p in waiting + list(running)} if (
-                        waiting or running) else set()
+                    self._resolve_binding(p.split("#spec")[0], bindings).model
+                    for p in pending} if pending else set()
                 released = self.deployment.maybe_undeploy_idle(pending_models)
                 for m in released:
                     self.scheduler.forget_model(m)
                     self.data.drop_model(m)
-                if not progressed:
-                    # deadlock guard: queued work, nothing running, nothing
-                    # schedulable for a long stretch => fail loudly
-                    stall = stall + 1 if (waiting and not running) else 0
-                    if stall > 5000:
+                # 7. progress bookkeeping: sleep on the wake event (pipelined)
+                #    or poll (serialized baseline); deadlock guard either way
+                if progressed or due:
+                    starving_since = None
+                    continue
+                if waiting and not running and not retries:
+                    starving_since = starving_since or time.time()
+                    if time.time() - starving_since > self.deadlock_timeout_s:
                         raise RuntimeError(
                             f"scheduling deadlock: waiting={waiting}, "
                             f"no resources accept them")
-                    time.sleep(0.003)
                 else:
-                    stall = 0
+                    starving_since = None
+                if self.pipelined:
+                    timeout = 0.02
+                    if retries:
+                        soonest = min(r["retry_at"] for r in retries)
+                        timeout = min(timeout,
+                                      max(soonest - time.time(), 0.001))
+                    self._wake.wait(timeout)
+                    self._wake.clear()
+                else:
+                    time.sleep(0.003)
 
             outputs = {}
             if collect:
@@ -215,6 +270,7 @@ class StreamFlowExecutor:
             raise
         finally:
             pool.shutdown(wait=False, cancel_futures=True)
+            self.data.close()
             self.deployment.undeploy_all()
 
     # --------------------------------------------------------------- schedule
@@ -224,31 +280,80 @@ class StreamFlowExecutor:
         deps = {}
         for token in step.inputs.values():
             deps[token] = max(self.data.token_size(token), 1)
-        return JobDescription(path, step.requirements, deps, service)
+        return JobDescription(path, step.requirements, deps, service,
+                              fanout=len(workflow.successors(path)))
 
     def _schedule_queue(self, workflow, bindings, waiting, running, pool):
         if not waiting:
             return waiting
-        descs = {p: self._job_desc(workflow, p,
-                                   self._resolve_binding(p, bindings).service)
-                 for p in waiting}
+        descs: Dict[str, JobDescription] = {}
+        avail: Dict[str, List[str]] = {}
+        for p in waiting:
+            b = self._resolve_binding(p, bindings)
+            self._ensure_deployed(b.model)
+            conn = self.deployment.get_connector(b.model)
+            descs[p] = self._job_desc(workflow, p, b.service)
+            avail[p] = conn.get_available_resources(b.service)
+        if not self.pipelined:
+            return self._schedule_serial(workflow, bindings, waiting,
+                                         descs, avail, running, pool)
+        placed = self.scheduler.schedule_batch(
+            [descs[p] for p in waiting], avail, self.data.remote_paths)
+        placed_names = set()
+        for job, resource in placed:
+            self._launch(workflow, job.name,
+                         self._resolve_binding(job.name, bindings), resource,
+                         running, pool, attempt=0, speculative=False)
+            placed_names.add(job.name)
+        still = [p for p in waiting if p not in placed_names]
+        self._stage_in(workflow, bindings, still, avail)
+        return still
+
+    def _schedule_serial(self, workflow, bindings, waiting, descs, avail,
+                         running, pool):
+        """The paper's loop: one Scheduler.schedule call per queued step."""
         order = self.scheduler.order_queue(
             [descs[p] for p in waiting], self.data.remote_paths)
         still = []
         for job in order:
             path = job.name
-            b = self._resolve_binding(path, bindings)
-            self._ensure_deployed(b.model)
-            conn = self.deployment.get_connector(b.model)
-            avail = conn.get_available_resources(b.service)
-            resource = self.scheduler.schedule(job, avail,
+            resource = self.scheduler.schedule(job, avail[path],
                                                self.data.remote_paths)
             if resource is None:
                 still.append(path)
                 continue
-            self._launch(workflow, path, b, resource, running, pool,
-                         attempt=0, speculative=False)
+            self._launch(workflow, path, self._resolve_binding(path, bindings),
+                         resource, running, pool, attempt=0,
+                         speculative=False)
         return still
+
+    def _stage_in(self, workflow, bindings, still: List[str],
+                  avail: Dict[str, List[str]]):
+        """Prefetch inputs of slot-starved steps onto their bound site so the
+        cross-site hop is already paid when a worker slot frees (the
+        follow-up move is an intra-model copy or an R4 elision)."""
+        for path in still[:self.prefetch_depth]:
+            b = self._resolve_binding(path, bindings)
+            resources = avail.get(path) or []
+            if not resources:
+                continue
+            step = workflow.steps[path]
+            tokens = [t for t in step.inputs.values()
+                      if not self.data.has_replica(t, b.model)]
+            if not tokens:
+                continue                        # already staged on the site
+            # the exact resource doesn't matter: once any replica is on the
+            # site, the schedule-time move is an intra-model copy (LAN) or
+            # an R4 elision — the WAN hop is what stage-in prepays
+            target = resources[0]
+            for token in tokens:
+                # a token whose holder died has no source until the retry
+                # machinery recomputes it — don't spam the pool with copies
+                # doomed to fail
+                if not (self.data.local_store.exists(token)
+                        or self.data.locations(token)):
+                    continue
+                self.data.transfer_data_async(token, b.model, target)
 
     def _launch(self, workflow, path, binding, resource, running, pool,
                 *, attempt: int, speculative: bool):
@@ -262,21 +367,32 @@ class StreamFlowExecutor:
         key = path if not speculative else f"{path}#spec{attempt}"
         running[key] = rec
         self.deployment.job_started(binding.model)
+        tokens = list(step.inputs.values())
+        # pipelined: transfers start NOW, concurrent with other steps'
+        # compute; the worker only joins the futures
+        xfer_futs = (self.data.prefetch(tokens, binding.model, resource)
+                     if self.pipelined else None)
 
         def work():
-            # move inputs in (R3/R4), then execute
-            for token in step.inputs.values():
-                self.data.transfer_data(token, binding.model, resource)
+            if xfer_futs is None:
+                for token in tokens:            # serialized baseline (R3/R4)
+                    self.data.transfer_data(token, binding.model, resource)
+            else:
+                for f in xfer_futs:
+                    f.result()                  # propagate transfer failures
             conn = self.deployment.get_connector(binding.model)
             inv = _Invocation(step, self, binding.model, resource)
             conn.run(resource, inv, environment={"__cancel__": cancel},
                      capture_output=False)
             return None
 
-        rec["future"] = pool.submit(work)
+        fut = pool.submit(work)
+        rec["future"] = fut
+        fut.add_done_callback(lambda _f: self._wake.set())
 
     # ---------------------------------------------------------------- harvest
-    def _harvest(self, running, completed, done_tokens, failed_final) -> bool:
+    def _harvest(self, running, completed, done_tokens, failed_final,
+                 retries: List[dict]) -> bool:
         progressed = False
         for key in list(running):
             rec = running[key]
@@ -294,8 +410,9 @@ class StreamFlowExecutor:
             step = wf.steps[path]
             if err is None and path in completed:
                 # lost the speculation race — record and move on
-                self.scheduler.notify(
-                    self._jobname(key), JobStatus.COMPLETED)
+                # (notify under the key the allocation was registered with:
+                # twins register as "path#specN", not "path")
+                self.scheduler.notify(key, JobStatus.COMPLETED)
                 self._record(JobEvent(path, b.model, rec["resource"],
                                       rec["start"], now, rec["attempt"],
                                       "duplicate", rec["speculative"]))
@@ -307,7 +424,7 @@ class StreamFlowExecutor:
                         b.model, rec["resource"], token)
                     done_tokens.add(token)
                 self.durations.record(b.service, now - rec["start"])
-                self.scheduler.notify(self._jobname(key), JobStatus.COMPLETED)
+                self.scheduler.notify(key, JobStatus.COMPLETED)
                 self._record(JobEvent(path, b.model, rec["resource"],
                                       rec["start"], now, rec["attempt"],
                                       "completed", rec["speculative"]))
@@ -317,7 +434,7 @@ class StreamFlowExecutor:
                         r2["cancel"].set()
                 continue
             # ---- failure path ------------------------------------------------
-            self.scheduler.notify(self._jobname(key), JobStatus.FAILED)
+            self.scheduler.notify(key, JobStatus.FAILED)
             self._record(JobEvent(path, b.model, rec["resource"],
                                   rec["start"], now, rec["attempt"],
                                   f"failed:{type(err).__name__}",
@@ -335,12 +452,11 @@ class StreamFlowExecutor:
                 self.deployment.redeploy(b.model)
             delay = self.fault.backoff_s * (
                 self.fault.backoff_mult ** rec["attempt"])
-            time.sleep(delay)
-            self._retry(rec, path, running)
+            # defer instead of sleeping: backoff must not block dispatch of
+            # unrelated ready work under concurrent execution
+            retries.append({"rec": rec, "path": path,
+                            "retry_at": now + delay})
         return progressed
-
-    def _jobname(self, key: str) -> str:
-        return key.split("#spec")[0]
 
     def _retry(self, rec, path, running):
         wf: Workflow = rec["workflow"]

@@ -1,4 +1,4 @@
-"""Task scheduling (paper §4.4): FCFS over fireable tasks + pluggable Policy.
+"""Task scheduling (paper §4.4): fireable-task queue + pluggable Policy.
 
 The Policy interface is kept argument-for-argument (Fig. 3):
 ``get_resource(job_description, available_resources, remote_paths, jobs,
@@ -6,9 +6,21 @@ resources)``.  Default = the paper's data-locality policy: walk the job's
 data dependencies (largest first) and take the first *free* resource already
 holding one; else any free resource; else None -> the task waits.
 
-Beyond-paper (flagged): BackfillPolicy — the paper notes queue-aware
-strategies "cannot currently be implemented" in its one-task-at-a-time loop;
-our executor optionally hands policies the whole fireable queue.
+Beyond-paper (flagged): queue-aware scheduling.  The paper notes such
+strategies "cannot currently be implemented" in its one-task-at-a-time FCFS
+loop; our pipelined executor hands policies the *whole* ready queue each
+tick via ``Scheduler.schedule_batch``.  Policies may implement two optional
+hooks on top of ``get_resource``:
+
+  order_queue(queue, remote_paths, resources)   -> reordered queue
+  select_batch(queue, available, remote_paths, jobs, resources)
+                                                -> [(job, resource), ...]
+
+Three queue-aware policies ship behind the same interface: ``backfill``
+(FCFS head never starves later jobs of their locality targets),
+``locality_batch`` (batch-wide greedy matching of jobs to data holders,
+largest transfers first) and ``widest_first`` (jobs unlocking the most
+successors run first, maximising downstream parallelism).
 """
 from __future__ import annotations
 
@@ -34,6 +46,8 @@ class JobDescription:
     # token -> size in bytes (data dependencies, for locality reasoning)
     data_deps: Dict[str, int] = field(default_factory=dict)
     service: str = "default"
+    # successor steps this job's outputs unlock (widest-first reasoning)
+    fanout: int = 0
 
 
 @dataclass
@@ -87,13 +101,9 @@ class DataLocalityPolicy(Policy):
     """The paper's default: largest dependency's holder first, if free."""
 
     def get_resource(self, job, available, remote_paths, jobs, resources):
-        deps = sorted(job.data_deps.items(), key=lambda kv: -kv[1])
-        for token, _size in deps:
-            for loc in remote_paths.get(token, []):
-                resource = _loc_resource(loc)
-                if (resource in available and _free(resource, resources)
-                        and _fits(job, resources[resource])):
-                    return resource
+        target = _locality_target(job, available, remote_paths, resources)
+        if target is not None:
+            return target
         for resource in available:
             if _free(resource, resources) and _fits(job, resources[resource]):
                 return resource
@@ -131,11 +141,27 @@ class LoadBalancePolicy(Policy):
         return best
 
 
+def _locality_target(job: JobDescription, candidates,
+                     remote_paths: RemotePaths,
+                     resources: Dict[str, ResourceAllocation]
+                     ) -> Optional[str]:
+    """The free resource already holding this job's largest dependency."""
+    for token, _size in sorted(job.data_deps.items(), key=lambda kv: -kv[1]):
+        for loc in remote_paths.get(token, []):
+            resource = _loc_resource(loc)
+            if (resource in candidates and _free(resource, resources)
+                    and _fits(job, resources[resource])):
+                return resource
+    return None
+
+
 class BackfillPolicy(Policy):
-    """Beyond-paper queue-aware policy: like locality, but refuses to give
-    the *last* free locality-neutral resource to a job whose dependency
-    holder is merely busy (leaving room for the queued job that needs it).
-    Requires the executor's whole-queue scheduling mode."""
+    """Beyond-paper queue-aware policy: FCFS with backfill.  Each queued job
+    first claims its free locality target; a job whose holder is busy (or
+    who has none) *backfills* onto free resources nobody later in the queue
+    has claimed as a locality target — so the queue head can't starve a
+    later job of the one resource that would make its transfer free.
+    Exploits the pipelined executor's whole-queue scheduling mode."""
 
     def __init__(self):
         self.inner = DataLocalityPolicy()
@@ -158,18 +184,112 @@ class BackfillPolicy(Policy):
             return (1, sum(j.data_deps.values()))
         return sorted(queue, key=key)
 
+    def select_batch(self, queue: Sequence[JobDescription],
+                     available: Dict[str, Sequence[str]],
+                     remote_paths: RemotePaths,
+                     jobs: Dict[str, "JobAllocation"],
+                     resources: Dict[str, ResourceAllocation]
+                     ) -> List[Tuple[JobDescription, str]]:
+        claimed: set = set()
+        # pass 1: every job pins its free locality target
+        targets: Dict[str, Optional[str]] = {}
+        for job in queue:
+            t = _locality_target(job, available.get(job.name, ()),
+                                 remote_paths, resources)
+            if t is not None and t not in claimed:
+                targets[job.name] = t
+                claimed.add(t)
+            else:
+                targets[job.name] = None
+        # pass 2: FCFS; locality winners take their pin, the rest backfill
+        # onto free resources nobody pinned
+        out: List[Tuple[JobDescription, str]] = []
+        for job in queue:
+            pin = targets[job.name]
+            if pin is not None:
+                out.append((job, pin))
+                continue
+            for resource in available.get(job.name, ()):
+                if (resource not in claimed and _free(resource, resources)
+                        and _fits(job, resources[resource])):
+                    out.append((job, resource))
+                    claimed.add(resource)
+                    break
+        return out
+
+
+class LocalityBatchPolicy(Policy):
+    """Beyond-paper queue-aware policy: batch-wide locality matching.
+    Jobs with the largest data dependencies pick their holders first
+    (a greedy weighted matching), so one tick's placement minimises the
+    bytes the whole batch will move, not just the queue head's."""
+
+    def __init__(self):
+        self.inner = DataLocalityPolicy()
+
+    def get_resource(self, job, available, remote_paths, jobs, resources):
+        return self.inner.get_resource(job, available, remote_paths, jobs,
+                                       resources)
+
+    def select_batch(self, queue, available, remote_paths, jobs, resources):
+        claimed: set = set()
+        out: List[Tuple[JobDescription, str]] = []
+        ordered = sorted(queue, key=lambda j: -sum(j.data_deps.values()))
+        leftovers = []
+        for job in ordered:
+            cands = [r for r in available.get(job.name, ())
+                     if r not in claimed]
+            t = _locality_target(job, cands, remote_paths, resources)
+            if t is not None:
+                out.append((job, t))
+                claimed.add(t)
+            else:
+                leftovers.append(job)
+        for job in leftovers:                     # FCFS over what's left
+            for resource in available.get(job.name, ()):
+                if (resource not in claimed and _free(resource, resources)
+                        and _fits(job, resources[resource])):
+                    out.append((job, resource))
+                    claimed.add(resource)
+                    break
+        return out
+
+
+class WidestFirstPolicy(Policy):
+    """Beyond-paper queue-aware policy: jobs whose outputs unlock the most
+    successors (``JobDescription.fanout``) schedule first, keeping the ready
+    queue wide — the classic critical-path heuristic for fork-join DAGs.
+    Placement itself stays locality-aware."""
+
+    def __init__(self):
+        self.inner = DataLocalityPolicy()
+
+    def get_resource(self, job, available, remote_paths, jobs, resources):
+        return self.inner.get_resource(job, available, remote_paths, jobs,
+                                       resources)
+
+    def order_queue(self, queue: List[JobDescription],
+                    remote_paths: RemotePaths,
+                    resources: Dict[str, ResourceAllocation]
+                    ) -> List[JobDescription]:
+        return sorted(queue, key=lambda j: -j.fanout)
+
 
 POLICIES = {
     "data_locality": DataLocalityPolicy,
     "round_robin": RoundRobinPolicy,
     "load_balance": LoadBalancePolicy,
     "backfill": BackfillPolicy,
+    "locality_batch": LocalityBatchPolicy,
+    "widest_first": WidestFirstPolicy,
 }
 
 
 class Scheduler:
-    """Tracks allocations; answers one job at a time (paper FCFS), with the
-    optional queue-reorder hook for BackfillPolicy."""
+    """Tracks allocations.  Answers one job at a time (``schedule``, the
+    paper's FCFS contract) or a whole ready queue per tick
+    (``schedule_batch``, the pipelined executor's contract) — queue-aware
+    policies see every fireable job before any placement is committed."""
 
     def __init__(self, policy: Optional[Policy] = None):
         self.policy = policy or DataLocalityPolicy()
@@ -208,6 +328,44 @@ class Scheduler:
             return queue
         with self._lock:
             return hook(queue, remote_paths, self.resources)
+
+    def schedule_batch(self, queue: Sequence[JobDescription],
+                       available: Dict[str, Sequence[str]],
+                       remote_paths: RemotePaths
+                       ) -> List[Tuple[JobDescription, str]]:
+        """Place as much of the ready queue as resources allow, atomically.
+
+        ``available`` maps job name -> resources its service exposes.  A
+        policy with a ``select_batch`` hook sees the whole queue at once;
+        otherwise jobs are placed one-by-one in (optionally reordered)
+        queue order, each placement visible to the next ``get_resource``
+        call.  Returns committed (job, resource) pairs; unplaced jobs
+        simply stay in the executor's waiting queue."""
+        with self._lock:
+            select = getattr(self.policy, "select_batch", None)
+            if select is not None:
+                picked = select(list(queue), available, remote_paths,
+                                self.jobs, self.resources)
+            else:
+                hook = getattr(self.policy, "order_queue", None)
+                ordered = (hook(list(queue), remote_paths, self.resources)
+                           if hook else list(queue))
+                picked = []
+                for job in ordered:
+                    resource = self.policy.get_resource(
+                        job, available.get(job.name, ()), remote_paths,
+                        self.jobs, self.resources)
+                    if resource is not None:
+                        picked.append((job, resource))
+                        # commit immediately so the next job sees it taken
+                        self.jobs[job.name] = JobAllocation(job, resource)
+                        self.resources[resource].jobs.append(job.name)
+                return picked
+            # commit select_batch's placements
+            for job, resource in picked:
+                self.jobs[job.name] = JobAllocation(job, resource)
+                self.resources[resource].jobs.append(job.name)
+            return picked
 
     def notify(self, job_name: str, status: JobStatus):
         with self._lock:

@@ -4,6 +4,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow        # full-arch sweeps: CI slow tier
+
 from repro.configs import ARCH_IDS, get_arch
 from repro.models import registry as R
 from repro.models.config import applicable_shapes, SHAPES_BY_NAME

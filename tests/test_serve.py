@@ -1,5 +1,8 @@
 """Serving driver: batched prefill+decode over a request queue."""
 import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow        # real prefill+decode loops: CI slow tier
 
 from repro.configs import get_arch
 from repro.launch.serve import Request, serve

@@ -1,15 +1,16 @@
 """Sharding-rule unit tests against an abstract 16x16 production mesh."""
 import jax
 import jax.numpy as jnp
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
 
 from repro.configs import get_arch
-from repro.distributed.sharding import (RULESETS, batch_specs, cache_specs,
-                                        logical_to_specs, safe_spec)
+from repro.distributed.sharding import (RULESETS, abstract_mesh, batch_specs,
+                                        cache_specs, logical_to_specs,
+                                        safe_spec)
 from repro.models import registry as R
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+MESH = abstract_mesh((16, 16), ("data", "model"))
+MESH3 = abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def test_safe_spec_divisibility():
