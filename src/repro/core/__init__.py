@@ -24,3 +24,7 @@ from repro.core.streamflow_file import (load as load_streamflow_file,
                                         StreamFlowFileError, validate)
 from repro.core.executor import StreamFlowExecutor, RunResult, JobEvent
 from repro.core.fault import FaultConfig, DurationTracker
+from repro.core.persistence import (CheckpointConfig, ExecutionJournal,
+                                    JournalError, JournalState)
+from repro.core.connectors import (start_external_site, get_external_site,
+                                   stop_external_site)

@@ -49,9 +49,10 @@ class _Location:
 
 class DataManager:
     def __init__(self, deployment_manager, scheduler=None, *,
-                 transfer_workers: int = 8):
+                 transfer_workers: int = 8, journal=None):
         self.deployment_manager = deployment_manager
         self.scheduler = scheduler
+        self.journal = journal                     # ExecutionJournal | None
         self._lock = threading.RLock()
         self.remote_paths: Dict[str, List[_Location]] = {}
         self.local_store = ObjectStore()           # the management node
@@ -72,9 +73,13 @@ class DataManager:
         with self._lock:
             locs = self.remote_paths.setdefault(token, [])
             loc = _Location(model, resource, path or token)
-            if not any(l.resource == resource and l.path == loc.path
-                       for l in locs):
-                locs.append(loc)
+            if any(l.resource == resource and l.path == loc.path
+                   for l in locs):
+                return
+            locs.append(loc)
+        # journal outside the lock: token locations survive the driver
+        if self.journal is not None:
+            self.journal.token(token, model, resource, loc.path)
 
     def locations(self, token: str) -> List[Tuple[str, str]]:
         with self._lock:
@@ -89,6 +94,8 @@ class DataManager:
     def drop_model(self, model: str):
         """A site died/undeployed: forget every token replica it held and
         fence any transfer still in flight toward it."""
+        if self.journal is not None:
+            self.journal.drop_model(model)
         with self._lock:
             self._model_epoch[model] = self._model_epoch.get(model, 0) + 1
             # purge the dedup map too: a consumer arriving after a redeploy
@@ -145,8 +152,17 @@ class DataManager:
             rec = TransferRecord(token, "elided" if present else "staging",
                                  None, f"{dst_model}:{dst_resource}",
                                  size, time.time() - t0)
-            self._done(rec, dst_model, dst_resource, token, epoch)
+            # no-op transfers have nothing to replay: keep the (fsync'd)
+            # journal records off the hottest transfer path
+            self._done(rec, dst_model, dst_resource, token, epoch,
+                       journaled=False)
             return rec
+
+        if self.journal is not None:
+            # write-ahead: a copy that was in flight when the driver died is
+            # journaled as started-but-not-done; resume re-issues it and the
+            # R4 elision / per-token dedup make the replay idempotent
+            self.journal.transfer(token, dst_model, dst_resource, "start")
 
         # source pick: management node, else first registered replica
         if self.local_store.exists(token) and not locs:
@@ -193,13 +209,40 @@ class DataManager:
         return rec
 
     def _done(self, rec: TransferRecord, model: str, resource: str,
-              token: str, epoch: int):
+              token: str, epoch: int, journaled: bool = True):
         with self._lock:
             self.transfers.append(rec)
             if epoch != self._model_epoch.get(model, 0):
                 return          # site dropped mid-flight: don't register a
                                 # replica the redeployed store doesn't hold
         self.add_remote_path_mapping(model, resource, token)
+        if journaled and self.journal is not None:
+            self.journal.transfer(token, model, resource, "done")
+
+    def journal_payload(self, token: str):
+        """Inline a token's bytes into the journal (checkpoint policy
+        permitting), so recovery survives even total site loss."""
+        if self.journal is None or not self.journal.include_payloads:
+            return
+        raw: Optional[bytes] = None
+        if self.local_store.exists(token):
+            raw = self.local_store.get(token)
+        else:
+            with self._lock:
+                locs = list(self.remote_paths.get(token, []))
+            for loc in locs:
+                conn = self.deployment_manager.get_connector(loc.model)
+                if conn is None:
+                    continue
+                try:
+                    st = conn.store(loc.resource)
+                    if st.exists(loc.path):
+                        raw = st.get(loc.path)
+                        break
+                except KeyError:
+                    continue
+        if raw is not None:
+            self.journal.payload(token, raw)
 
     # -- async transfer plane (pipelined executor) -------------------------------
     def _pool(self) -> ThreadPoolExecutor:

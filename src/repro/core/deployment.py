@@ -18,7 +18,7 @@ from dataclasses import dataclass, field
 from typing import Dict, List, Optional
 
 from repro.core.connector import Connector
-from repro.core.connectors import make_connector
+from repro.core.connectors import get_external_site, make_connector
 
 
 @dataclass
@@ -40,12 +40,17 @@ class _Deployment:
 
 class DeploymentManager:
     def __init__(self, model_specs: Dict[str, ModelSpec], *,
-                 grace_period_s: Optional[float] = None):
+                 grace_period_s: Optional[float] = None, journal=None):
         self._specs = dict(model_specs)
         self._lock = threading.RLock()
         self.deployments_map: Dict[str, _Deployment] = {}
         self.grace_period_s = grace_period_s
+        self.journal = journal                    # ExecutionJournal | None
         self.timeline: List[tuple] = []           # (model, event, t)
+
+    def _journal(self, model: str, event: str):
+        if self.journal is not None:
+            self.journal.deployment(model, event)
 
     def register(self, spec: ModelSpec):
         with self._lock:
@@ -58,14 +63,22 @@ class DeploymentManager:
             dep = self.deployments_map.get(model_name)
             if dep is None:
                 spec = self._specs[model_name]
-                conn = make_connector(spec.name, spec.type, spec.config)
-                if not spec.external:
+                if spec.external:
+                    # attach-only: prefer a still-live user-managed site
+                    # (this is what resume() re-attaches to after a crash)
+                    conn = get_external_site(spec.name)
+                    if conn is None:
+                        conn = make_connector(spec.name, spec.type,
+                                              spec.config)
+                        conn.deployed = True
+                    self._journal(model_name, "attach")
+                else:
+                    conn = make_connector(spec.name, spec.type, spec.config)
                     t0 = time.time()
                     conn.deploy()
                     self.timeline.append((model_name, "deploy", t0,
                                           time.time()))
-                else:
-                    conn.deployed = True
+                    self._journal(model_name, "deploy")
                 dep = _Deployment(conn, time.time())
                 self.deployments_map[model_name] = dep
             dep.last_used = time.time()
@@ -88,6 +101,9 @@ class DeploymentManager:
             spec = self._specs.get(model_name)
             if spec is None or not spec.external:
                 dep.connector.undeploy()
+                self._journal(model_name, "undeploy")
+            else:
+                self._journal(model_name, "detach")
             self.timeline.append((model_name, "undeploy", t0, time.time()))
 
     def undeploy_all(self):

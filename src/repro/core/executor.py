@@ -32,12 +32,20 @@ Per iteration (both modes):
 
 On success final outputs are collected to the management node; models are
 undeployed at the end — and on any unhandled exception (paper §4.5).
+
+With a ``checkpoint`` configured, every state transition is written ahead
+to an execution journal (``persistence.py``) and ``resume(journal_path)``
+recovers a crashed run: journaled-complete steps whose output tokens are
+still reachable (verified through the Connector) are skipped, and only the
+lost frontier re-executes.
 """
 from __future__ import annotations
 
+import os
 import threading
 import time
 from concurrent.futures import ThreadPoolExecutor, Future
+from concurrent.futures import wait as futures_wait
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
@@ -45,6 +53,8 @@ from repro.core.connector import deserialize, serialize
 from repro.core.datamanager import DataManager
 from repro.core.deployment import DeploymentManager, ModelSpec
 from repro.core.fault import DurationTracker, FaultConfig
+from repro.core.persistence import (CheckpointConfig, ExecutionJournal,
+                                    JournalError, JournalState)
 from repro.core.scheduler import (JobDescription, JobStatus, POLICIES,
                                   Scheduler)
 from repro.core.streamflow_file import Binding, StreamFlowConfig
@@ -116,12 +126,21 @@ class StreamFlowExecutor:
                  pipelined: bool = True,
                  transfer_workers: int = 8,
                  prefetch_depth: int = 8,
-                 deadlock_timeout_s: float = 2.0):
+                 deadlock_timeout_s: float = 2.0,
+                 checkpoint=None):
+        # checkpoint: CheckpointConfig | dict | journal-path str | None
+        if isinstance(checkpoint, str):
+            checkpoint = CheckpointConfig(journal_path=checkpoint)
+        elif isinstance(checkpoint, dict):
+            checkpoint = CheckpointConfig.from_dict(checkpoint)
+        self.journal = ExecutionJournal.from_checkpoint(checkpoint)
         self.deployment = DeploymentManager(models,
-                                            grace_period_s=grace_period_s)
+                                            grace_period_s=grace_period_s,
+                                            journal=self.journal)
         self.scheduler = Scheduler(POLICIES[policy]())
         self.data = DataManager(self.deployment, self.scheduler,
-                                transfer_workers=transfer_workers)
+                                transfer_workers=transfer_workers,
+                                journal=self.journal)
         self.fault = fault or FaultConfig()
         self.durations = DurationTracker()
         self.max_workers = max_workers
@@ -131,12 +150,17 @@ class StreamFlowExecutor:
         self.events: List[JobEvent] = []
         self._ev_lock = threading.Lock()
         self._wake = threading.Event()
+        # test/ops hook: called as tick_hook(tick_index, completed_paths) at
+        # the top of every loop iteration — crash-injection raises from here
+        self.tick_hook: Optional[Callable[[int, set], None]] = None
 
     @classmethod
     def from_config(cls, cfg: StreamFlowConfig, **kw) -> "StreamFlowExecutor":
-        return cls(cfg.models, policy=cfg.policy,
-                   grace_period_s=cfg.grace_period_s,
-                   fault=FaultConfig.from_dict(cfg.fault), **kw)
+        kw.setdefault("checkpoint", cfg.checkpoint or None)
+        kw.setdefault("policy", cfg.policy)
+        kw.setdefault("grace_period_s", cfg.grace_period_s)
+        kw.setdefault("fault", FaultConfig.from_dict(cfg.fault))
+        return cls(cfg.models, **kw)
 
     # ------------------------------------------------------------------ utils
     def _resolve_binding(self, step_path: str, bindings: List[Binding]
@@ -171,17 +195,206 @@ class StreamFlowExecutor:
     def run(self, workflow: Workflow, bindings: List[Binding],
             inputs: Optional[Dict[str, Any]] = None,
             collect: bool = True) -> RunResult:
+        return self._execute(workflow, bindings, inputs, collect)
+
+    # ---------------------------------------------------------------- resume
+    def resume(self, journal_path: Optional[str] = None,
+               workflow: Optional[Workflow] = None,
+               bindings: Optional[List[Binding]] = None,
+               inputs: Optional[Dict[str, Any]] = None,
+               collect: bool = True) -> RunResult:
+        """Recover a crashed run from its execution journal.
+
+        Replays ``journal_path`` (defaults to this executor's configured
+        journal), rebuilds the workflow and bindings from the journal when
+        the caller doesn't pass them (possible whenever the original run
+        came from a StreamFlow file), then:
+
+          * restores the external input tokens from their journaled payloads;
+          * for every journaled-complete step, verifies each output token is
+            *still reachable* — an inline journal payload, or present in a
+            live site's store, checked through the Connector (the journal is
+            never trusted blindly: a dead site means the step re-runs);
+          * registers the verified locations with the DataManager, marks
+            fully-verified steps completed, and re-issues journaled
+            in-flight transfers (idempotent via R4 elision + per-token
+            dedup);
+          * re-enters the normal execution loop, which fires only the lost
+            frontier.
+
+        Resuming an already-finished journal re-executes nothing and is
+        idempotent.  All events of the resumed run append to the same
+        journal, so a second crash resumes from strictly later state.
+        """
+        if journal_path is None:
+            if self.journal is None:
+                raise ValueError(
+                    "resume() needs a journal_path (or an executor "
+                    "constructed with checkpoint=...)")
+            journal_path = self.journal.path
+        state = ExecutionJournal.replay(journal_path)
+        if workflow is None:
+            workflow = state.build_workflow()
+        if bindings is None:
+            bindings = state.build_bindings()
+            if not bindings:
+                raise JournalError(
+                    "journal holds no bindings; pass them to resume()")
+        state.check_structure(workflow)
+        # the resumed run must append to the WAL it replayed — a second
+        # crash then resumes from strictly later state in the same file
+        if self.journal is None or (os.path.abspath(self.journal.path)
+                                    != os.path.abspath(journal_path)):
+            # keep the durability policy: the executor's configured level,
+            # else whatever the replayed WAL itself was written with
+            opts = dict(state.journal_opts or {})
+            if self.journal is not None:
+                opts = dict(fsync=self.journal.fsync,
+                            include_payloads=self.journal.include_payloads,
+                            max_payload_bytes=self.journal.max_payload_bytes)
+                self.journal.close()
+            self.journal = ExecutionJournal(journal_path, **opts)
+            self.deployment.journal = self.journal
+            self.data.journal = self.journal
+
+        explicit = dict(inputs or {})
+        inputs = dict(explicit)
+        for token, raw in state.input_payloads.items():
+            if token not in inputs:
+                inputs[token] = deserialize(raw)
+        # journaled inputs are already durable; re-journal only overrides —
+        # and taint everything downstream of a changed value, or completed
+        # steps computed from the OLD input would silently be skipped and
+        # the final outputs would mix the two input epochs
+        changed: set = set()
+        for token, value in explicit.items():
+            raw = serialize(value)
+            if state.input_payloads.get(token) != raw:
+                self.journal.input(token, raw)
+                if token in state.input_payloads:
+                    changed.add(token)
+        tainted = self._taint_downstream(workflow, changed)
+        state.completed_steps = {
+            p for p in state.completed_steps
+            if p in workflow.steps and not (
+                tainted & set(workflow.steps[p].inputs.values()))}
+        # purge stale replicas of tainted tokens from still-live sites, or
+        # the R4 presence check would elide transfers onto old-epoch bytes
+        for token in tainted:
+            for model, resource, store_path in state.token_locations.get(
+                    token, ()):
+                try:
+                    self.deployment.deploy(model).store(resource).delete(
+                        store_path)
+                except KeyError:
+                    continue
+        # in-flight transfer replay below needs its local sources in place
+        # (the full input pass happens once, inside _execute)
+        for token in {t for t, _, _ in state.transfers_inflight
+                      if t in inputs}:
+            self.data.put_local(token, inputs[token])
+
+        pre_completed: set = set()
+        pre_tokens: set = set()
+        for path in state.completed_steps:
+            step = workflow.steps.get(path)
+            if step is None:
+                continue
+            found = {t: self._verify_token(state, t) for t in step.outputs}
+            if any(v is None for v in found.values()):
+                continue        # output lost with its site: re-run the step
+            # register only fully-verified steps — a half-lost step re-runs
+            # and must not race its consumers against stale replicas
+            for token, (how, what) in found.items():
+                if how == "payload":
+                    self.data.local_store.put(token, what)
+                else:
+                    model, resource, store_path = what
+                    self.data.add_remote_path_mapping(model, resource,
+                                                      token, store_path)
+                pre_tokens.add(token)
+            pre_completed.add(path)
+
+        # replay copies that were in flight at the crash; dedup/elision make
+        # re-issuing safe, and the run loop re-requests anything we skip
+        for token, dst_model, dst_resource in sorted(state.transfers_inflight):
+            if not (self.data.local_store.exists(token)
+                    or self.data.locations(token)):
+                continue
+            try:
+                self.deployment.deploy(dst_model)
+                self.data.transfer_data_async(token, dst_model, dst_resource)
+            except KeyError:
+                continue        # model no longer configured: skip the replay
+
+        return self._execute(workflow, bindings, inputs, collect,
+                             pre_completed=pre_completed,
+                             pre_tokens=pre_tokens, resumed=True)
+
+    @staticmethod
+    def _taint_downstream(workflow: Workflow, changed: set) -> set:
+        """Close a set of changed tokens over the DAG: any step consuming a
+        tainted token taints all its outputs."""
+        tainted = set(changed)
+        grew = bool(changed)
+        while grew:
+            grew = False
+            for step in workflow.steps.values():
+                if tainted & set(step.inputs.values()):
+                    fresh = set(step.outputs) - tainted
+                    if fresh:
+                        tainted |= fresh
+                        grew = True
+        return tainted
+
+    def _verify_token(self, state: JournalState, token: str):
+        """Locate a journaled token that is still reachable.  Returns
+        ("payload", raw_bytes), ("remote", (model, resource, store_path))
+        for the first location the Connector confirms, or None."""
+        raw = state.payloads.get(token)
+        if raw is not None:
+            return ("payload", raw)
+        for model, resource, store_path in state.token_locations.get(
+                token, ()):
+            try:
+                conn = self.deployment.deploy(model)
+            except KeyError:
+                continue        # model not in this executor's spec set
+            if not conn.ping(resource):
+                continue
+            try:
+                if conn.store(resource).exists(store_path):
+                    return ("remote", (model, resource, store_path))
+            except KeyError:
+                continue        # resource gone from the (re)deployed site
+        return None
+
+    def _execute(self, workflow: Workflow, bindings: List[Binding],
+                 inputs: Optional[Dict[str, Any]] = None,
+                 collect: bool = True, *,
+                 pre_completed: Optional[set] = None,
+                 pre_tokens: Optional[set] = None,
+                 resumed: bool = False) -> RunResult:
         t_start = time.time()
         workflow.validate()
         inputs = inputs or {}
-        missing = set(workflow.external_inputs()) - set(inputs)
+        missing = set(workflow.external_inputs()) - set(inputs) \
+            - set(pre_tokens or ())
         if missing:
             raise ValueError(f"missing workflow inputs: {sorted(missing)}")
         for token, value in inputs.items():
             self.data.put_local(token, value)
+        if self.journal is not None:
+            # a resumed run's inputs are already durable in this WAL
+            # (resume() journals only overriding values)
+            self.journal.begin_run(
+                workflow, bindings,
+                {} if resumed else {t: serialize(v)
+                                    for t, v in inputs.items()},
+                resumed=resumed)
 
-        done_tokens = set(inputs)
-        completed: set = set()
+        done_tokens = set(inputs) | set(pre_tokens or ())
+        completed: set = set(pre_completed or ())
         running: Dict[str, dict] = {}          # step path -> job record
         waiting: List[str] = []
         retries: List[dict] = []               # {rec, path, retry_at}
@@ -191,8 +404,12 @@ class StreamFlowExecutor:
         self._pool = pool
         self._wake.clear()
         starving_since: Optional[float] = None
+        tick = 0
         try:
             while len(completed) < len(workflow.steps):
+                if self.tick_hook is not None:
+                    self.tick_hook(tick, set(completed))
+                tick += 1
                 if failed_final:
                     step, err = next(iter(failed_final.items()))
                     raise RuntimeError(
@@ -202,6 +419,8 @@ class StreamFlowExecutor:
                            + [r["path"] for r in retries])
                 for path in workflow.fireable(sorted(done_tokens), started):
                     waiting.append(path)
+                    if self.journal is not None:
+                        self.journal.step(path, "fireable")
                 # 2. launch retries whose backoff deadline passed (a step
                 # whose speculative twin finished during the backoff is
                 # already complete — don't re-execute it)
@@ -257,10 +476,37 @@ class StreamFlowExecutor:
                 else:
                     time.sleep(0.003)
 
+            # drain leftovers (surviving speculative twins / out-raced
+            # primaries): their scheduler allocations and deployment job
+            # counts must not leak past the run.  One bounded wait for the
+            # lot; anything still running after it is abandoned (its result
+            # can't matter — every step already completed) but released.
+            if running:
+                futures_wait([r["future"] for r in running.values()],
+                             timeout=self.deadlock_timeout_s)
+            for key, rec in list(running.items()):
+                fut: Future = rec["future"]
+                del running[key]
+                self.deployment.job_finished(rec["binding"].model)
+                finished_clean = fut.done() and not fut.cancelled() \
+                    and fut.exception() is None
+                self.scheduler.notify(
+                    key, JobStatus.COMPLETED if finished_clean
+                    else JobStatus.FAILED)
+                self._record(JobEvent(key.split("#spec")[0],
+                                      rec["binding"].model, rec["resource"],
+                                      rec["start"], time.time(),
+                                      rec["attempt"],
+                                      "duplicate" if finished_clean
+                                      else "abandoned",
+                                      rec["speculative"]))
+
             outputs = {}
             if collect:
                 for token in workflow.final_outputs():
                     outputs[token] = self.data.collect_output(token)
+            if self.journal is not None:
+                self.journal.end_run(list(outputs))
             return RunResult(outputs, list(self.events),
                              list(self.data.transfers),
                              list(self.deployment.timeline),
@@ -367,6 +613,9 @@ class StreamFlowExecutor:
         key = path if not speculative else f"{path}#spec{attempt}"
         running[key] = rec
         self.deployment.job_started(binding.model)
+        if self.journal is not None and not speculative:
+            self.journal.step(path, "scheduled", model=binding.model,
+                              resource=resource, attempt=attempt)
         tokens = list(step.inputs.values())
         # pipelined: transfers start NOW, concurrent with other steps'
         # compute; the worker only joins the futures
@@ -374,6 +623,9 @@ class StreamFlowExecutor:
                      if self.pipelined else None)
 
         def work():
+            if self.journal is not None and not speculative:
+                self.journal.step(path, "running", model=binding.model,
+                                  resource=resource, attempt=attempt)
             if xfer_futs is None:
                 for token in tokens:            # serialized baseline (R3/R4)
                     self.data.transfer_data(token, binding.model, resource)
@@ -422,7 +674,15 @@ class StreamFlowExecutor:
                 for token in step.outputs:
                     self.data.add_remote_path_mapping(
                         b.model, rec["resource"], token)
+                    self.data.journal_payload(token)
                     done_tokens.add(token)
+                # WAL ordering: "completed" is written only after every
+                # output token's location (and optional payload) is durable,
+                # so a journaled-complete step always has journaled tokens
+                if self.journal is not None:
+                    self.journal.step(path, "completed", model=b.model,
+                                      resource=rec["resource"],
+                                      attempt=rec["attempt"])
                 self.durations.record(b.service, now - rec["start"])
                 self.scheduler.notify(key, JobStatus.COMPLETED)
                 self._record(JobEvent(path, b.model, rec["resource"],
@@ -434,6 +694,16 @@ class StreamFlowExecutor:
                         r2["cancel"].set()
                 continue
             # ---- failure path ------------------------------------------------
+            if self.journal is not None and not rec["speculative"]:
+                self.journal.step(path, "failed", model=b.model,
+                                  resource=rec["resource"],
+                                  attempt=rec["attempt"],
+                                  error=type(err).__name__)
+                # job-state export on the crash-relevant transition only:
+                # diagnostics for a wedged/failing run, without paying an
+                # extra fsync on every healthy completion
+                self.journal.scheduler_state(
+                    self.scheduler.export_state(running_only=True))
             self.scheduler.notify(key, JobStatus.FAILED)
             self._record(JobEvent(path, b.model, rec["resource"],
                                   rec["start"], now, rec["attempt"],

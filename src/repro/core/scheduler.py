@@ -378,6 +378,24 @@ class Scheduler:
                 if res and job_name in res.jobs:
                     res.jobs.remove(job_name)
 
+    def export_state(self, running_only: bool = False) -> dict:
+        """JSON-safe snapshot of job allocations + resource occupancy —
+        journaled by the executor so a crashed driver's scheduling state is
+        inspectable.  ``running_only`` drops finished allocations, bounding
+        the snapshot by scheduling width instead of workflow length (the
+        executor journals one snapshot per completion, so the full history
+        would make the journal grow quadratically)."""
+        with self._lock:
+            jobs = {name: {"resource": a.resource, "status": a.status.value}
+                    for name, a in self.jobs.items()
+                    if not running_only or a.status is JobStatus.RUNNING}
+            return {
+                "jobs": jobs,
+                "resources": {name: {"model": r.model, "service": r.service,
+                                     "jobs": list(r.jobs)}
+                              for name, r in self.resources.items()},
+            }
+
     def running_on(self, model: str) -> List[str]:
         with self._lock:
             return [j for j, a in self.jobs.items()

@@ -46,6 +46,7 @@ class StreamFlowConfig:
     policy: str = "data_locality"
     grace_period_s: Optional[float] = None
     fault: Dict[str, Any] = field(default_factory=dict)
+    checkpoint: Dict[str, Any] = field(default_factory=dict)
 
 
 def _check(cond: bool, msg: str):
@@ -100,6 +101,11 @@ def _build_workflow(name: str, wcfg: dict) -> Workflow:
     _check(isinstance(wf, Workflow),
            f"workflow builder for {name} returned {type(wf).__name__}")
     wf.validate()
+    # remember how to rebuild this DAG: the execution journal records it so
+    # Executor.resume(journal_path) can reconstruct the workflow by itself
+    wf.builder_info = {"module": wcfg["module"],
+                       "builder": wcfg.get("builder", "build_workflow"),
+                       "args": wcfg.get("args", {})}
     return wf
 
 
@@ -129,9 +135,15 @@ def load(path_or_doc) -> StreamFlowConfig:
         workflows[name] = WorkflowEntry(
             name, _build_workflow(name, w["config"]), bindings)
 
+    ckpt = doc.get("checkpoint", {})
+    if ckpt.get("enabled", True) and "journal_path" in ckpt:
+        _check(bool(ckpt["journal_path"]),
+               "checkpoint.journal_path must be non-empty")
+
     sched = doc.get("scheduling", {})
     return StreamFlowConfig(
         models=models, workflows=workflows,
         policy=sched.get("policy", "data_locality"),
         grace_period_s=sched.get("grace_period_s"),
-        fault=doc.get("fault", {}))
+        fault=doc.get("fault", {}),
+        checkpoint=ckpt)

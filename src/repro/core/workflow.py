@@ -49,6 +49,9 @@ class Workflow:
         self.name = name
         self.steps: Dict[str, Step] = {}
         self._producer: Dict[str, str] = {}      # token -> step path
+        # {module, builder, args} when built from a StreamFlow file — lets
+        # the execution journal record how to rebuild this DAG on resume
+        self.builder_info: Optional[Dict[str, Any]] = None
 
     def add_step(self, step: Step) -> Step:
         if step.path in self.steps:

@@ -1,0 +1,219 @@
+"""Unit coverage for the write-ahead execution journal (persistence.py):
+record round-trips, state aggregation, tail-corruption tolerance, and the
+checkpoint config plumbing through StreamFlow files."""
+import json
+
+import pytest
+
+from repro.core import (Binding, CheckpointConfig, ExecutionJournal,
+                        JournalError, load_streamflow_file, serialize)
+from repro.core.persistence import JournalState
+from repro.core.workflow import Step, Workflow
+
+
+def _wf():
+    wf = Workflow("t")
+    wf.add_step(Step("/a", lambda i, c: {"x": 1}, {"seed": "seed"}, ("x",)))
+    wf.add_step(Step("/b", lambda i, c: {"y": 2}, {"x": "x"}, ("y",)))
+    return wf
+
+
+def _journal(tmp_path, **kw):
+    return ExecutionJournal(str(tmp_path / "j.jsonl"), **kw)
+
+
+def test_roundtrip_aggregates_state(tmp_path):
+    j = _journal(tmp_path)
+    j.begin_run(_wf(), [Binding("/", "m", "svc")],
+                {"seed": serialize(41)})
+    j.step("/a", "fireable")
+    j.step("/a", "scheduled", model="m", resource="m/svc/0", attempt=0)
+    j.step("/a", "running", model="m", resource="m/svc/0", attempt=0)
+    j.token("x", "m", "m/svc/0", "x")
+    j.step("/a", "completed", model="m", resource="m/svc/0", attempt=0)
+    j.transfer("x", "m", "m/svc/1", "start")
+    j.deployment("m", "deploy")
+    j.scheduler_state({"jobs": {}, "resources": {}})
+    j.close()
+
+    st = ExecutionJournal.replay(j.path)
+    assert st.workflow_name == "t"
+    assert st.completed_steps == {"/a"}
+    assert "/b" not in st.steps         # never journaled: never fired
+    assert st.steps["/a"].state == "completed"
+    assert st.steps["/a"].resource == "m/svc/0"
+    assert st.token_locations["x"] == [("m", "m/svc/0", "x")]
+    assert st.transfers_inflight == {("x", "m", "m/svc/1")}
+    assert st.deployments["m"] == "deploy"
+    assert st.bindings == [("/", "m", "svc")]
+    assert not st.run_ended
+    from repro.core import deserialize
+    assert deserialize(st.input_payloads["seed"]) == 41
+
+
+def test_transfer_done_clears_inflight(tmp_path):
+    j = _journal(tmp_path)
+    j.transfer("x", "m", "r0", "start")
+    j.transfer("x", "m", "r0", "done")
+    j.step("/a", "completed")
+    j.close()
+    assert ExecutionJournal.replay(j.path).transfers_inflight == set()
+
+
+def test_drop_model_invalidates_journaled_locations(tmp_path):
+    j = _journal(tmp_path)
+    j.token("x", "m", "m/svc/0", "x")
+    j.token("x", "other", "other/s/0", "x")
+    j.transfer("y", "m", "m/svc/1", "start")
+    j.drop_model("m")
+    j.step("/a", "completed")
+    j.close()
+    st = ExecutionJournal.replay(j.path)
+    assert st.token_locations["x"] == [("other", "other/s/0", "x")]
+    assert st.transfers_inflight == set()
+    assert st.deployments["m"] == "dropped"
+
+
+def test_truncated_tail_is_dropped_not_fatal(tmp_path):
+    j = _journal(tmp_path)
+    j.step("/a", "completed")
+    j.close()
+    with open(j.path, "a", encoding="utf-8") as fh:
+        fh.write('{"v":1,"t":1,"kind":"step","pa')     # torn mid-write
+    st = ExecutionJournal.replay(j.path)
+    assert st.completed_steps == {"/a"}
+
+
+def test_append_after_torn_tail_repairs_not_corrupts(tmp_path):
+    # a crash tears the final line; reopening for append must truncate it,
+    # or the next record concatenates into mid-file corruption
+    j = _journal(tmp_path)
+    j.step("/a", "completed")
+    j.close()
+    with open(j.path, "a", encoding="utf-8") as fh:
+        fh.write('{"v":1,"t":1,"kind":"step","pa')
+    j2 = ExecutionJournal(j.path)
+    j2.step("/b", "completed")
+    j2.close()
+    st = ExecutionJournal.replay(j.path)
+    assert st.completed_steps == {"/a", "/b"}
+
+
+def test_append_to_fully_torn_file_recovers(tmp_path):
+    p = tmp_path / "j.jsonl"
+    p.write_bytes(b'{"v":1,"kind"')                # no newline anywhere
+    j = ExecutionJournal(str(p))
+    j.step("/a", "completed")
+    j.close()
+    assert ExecutionJournal.replay(str(p)).completed_steps == {"/a"}
+
+
+def test_corruption_before_valid_records_raises(tmp_path):
+    j = _journal(tmp_path)
+    j.step("/a", "completed")
+    j.step("/b", "completed")
+    j.close()
+    lines = open(j.path, encoding="utf-8").read().splitlines()
+    lines[0] = lines[0][:10]                           # damage the FIRST line
+    with open(j.path, "w", encoding="utf-8") as fh:
+        fh.write("\n".join(lines) + "\n")
+    with pytest.raises(JournalError):
+        ExecutionJournal.replay(j.path)
+
+
+def test_replay_missing_or_empty_journal_raises(tmp_path):
+    with pytest.raises(JournalError):
+        ExecutionJournal.replay(str(tmp_path / "nope.jsonl"))
+    p = tmp_path / "empty.jsonl"
+    p.write_text("")
+    with pytest.raises(JournalError):
+        ExecutionJournal.replay(str(p))
+
+
+def test_unknown_record_kinds_are_ignored(tmp_path):
+    p = tmp_path / "j.jsonl"
+    rows = [{"v": 9, "t": 0, "kind": "hologram", "zap": 1},
+            {"v": 1, "t": 0, "kind": "step", "path": "/a",
+             "state": "completed"}]
+    p.write_text("\n".join(json.dumps(r) for r in rows) + "\n")
+    assert ExecutionJournal.replay(str(p)).completed_steps == {"/a"}
+
+
+def test_payload_policy_respects_size_cap(tmp_path):
+    j = _journal(tmp_path, include_payloads=True, max_payload_bytes=8)
+    assert j.payload("small", b"1234")
+    assert not j.payload("big", b"x" * 64)
+    j.step("/a", "completed")
+    j.close()
+    st = ExecutionJournal.replay(j.path)
+    assert st.payloads == {"small": b"1234"}
+
+
+def test_check_structure_rejects_different_dag(tmp_path):
+    j = _journal(tmp_path)
+    j.begin_run(_wf(), [], {})
+    j.close()
+    st = ExecutionJournal.replay(j.path)
+    other = Workflow("t")
+    other.add_step(Step("/a", lambda i, c: {}, {"seed": "seed"}, ("x",)))
+    with pytest.raises(JournalError):
+        st.check_structure(other)
+    st.check_structure(_wf())                          # same DAG: fine
+
+
+def test_build_workflow_requires_builder_reference():
+    with pytest.raises(JournalError):
+        JournalState().build_workflow()
+
+
+def test_scheduler_export_state_running_only():
+    from repro.core import (JobDescription, JobStatus, Scheduler)
+    from repro.core.workflow import Requirements
+    s = Scheduler()
+    s.register_resource("r0", "m", "svc", cores=2, memory_gb=4)
+    s.register_resource("r1", "m", "svc", cores=2, memory_gb=4)
+    for name in ("a", "b"):
+        s.schedule(JobDescription(name, Requirements(1, 1), {}, "svc"),
+                   ["r0", "r1"], {})
+    s.notify("a", JobStatus.COMPLETED)
+    assert set(s.export_state()["jobs"]) == {"a", "b"}
+    running = s.export_state(running_only=True)["jobs"]
+    assert set(running) == {"b"}        # bounded by width, not history
+
+
+def test_checkpoint_config_from_dict():
+    assert CheckpointConfig.from_dict(None) is None
+    assert CheckpointConfig.from_dict({}) is None
+    assert CheckpointConfig.from_dict({"enabled": False,
+                                       "journal_path": "x"}) is None
+    cfg = CheckpointConfig.from_dict({"journal_path": "j.jsonl",
+                                      "fsync": False})
+    assert cfg.journal_path == "j.jsonl" and not cfg.fsync
+    assert not cfg.include_payloads                    # off by default
+    with pytest.raises(ValueError):                    # typos must not
+        CheckpointConfig.from_dict({"journal_pth": "x"})  # misconfigure
+
+
+def test_streamflow_file_checkpoint_block(tmp_path):
+    from repro.configs.recovery_demo import streamflow_doc
+    doc = streamflow_doc(journal_path=str(tmp_path / "j.jsonl"))
+    cfg = load_streamflow_file(doc)
+    assert cfg.checkpoint["journal_path"].endswith("j.jsonl")
+
+    doc["checkpoint"]["journal_path"] = ""
+    from repro.core import StreamFlowFileError
+    with pytest.raises(StreamFlowFileError):
+        load_streamflow_file(doc)
+
+    doc["checkpoint"] = {"bogus_key": 1}
+    with pytest.raises(StreamFlowFileError):
+        load_streamflow_file(doc)
+
+
+def test_builder_info_recorded_by_streamflow_load(tmp_path):
+    from repro.configs.recovery_demo import streamflow_doc
+    cfg = load_streamflow_file(streamflow_doc(
+        journal_path=str(tmp_path / "j.jsonl"), n_blocks=2))
+    wf = cfg.workflows["recovery-demo"].workflow
+    assert wf.builder_info["module"] == "repro.configs.recovery_demo"
+    assert wf.builder_info["args"]["n_blocks"] == 2
