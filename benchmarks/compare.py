@@ -1,0 +1,223 @@
+"""Benchmark-regression gate: diff a CI ``bench.json`` against the
+committed ``benchmarks/baseline.json`` and FAIL on regression.
+
+Raw wall-clock numbers on shared CI runners are too noisy to gate on, so
+every gated metric is *self-normalizing* — a ratio between two variants
+measured in the same process (pipelined vs serialized makespan, direct vs
+two-step routing) or a deterministic structural count (bytes through the
+management node, number of direct transfers).  Each metric carries:
+
+  * a committed baseline value (``benchmarks/baseline.json``),
+  * a relative tolerance — how much worse than baseline is still noise,
+  * an optional hard bound — the claim itself (e.g. "direct routing must
+    move fewer bytes through the management node"), enforced regardless
+    of what the baseline says.
+
+Usage:
+  python benchmarks/compare.py bench.json                # gate (CI)
+  python benchmarks/compare.py bench.json --write-baseline
+                                                         # refresh baseline
+
+Exit codes: 0 = pass, 1 = regression / missing metric / unreadable input.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import sys
+import time
+from dataclasses import dataclass
+from typing import Callable, Dict, List, Optional
+
+HERE = os.path.dirname(os.path.abspath(__file__))
+DEFAULT_BASELINE = os.path.join(HERE, "baseline.json")
+
+
+def _rows_by(results: dict, bench: str, key: str) -> Dict[str, dict]:
+    rows = results.get(bench)
+    if rows is None:
+        raise KeyError(f"bench.json has no results for {bench!r} "
+                       f"(was it in --only?)")
+    return {r[key]: r for r in rows}
+
+
+def _pipeline_speedup(results: dict) -> float:
+    """Serialized FCFS over pipelined makespan on the Fig.9 hybrid —
+    the PR-2 claim that pipelining hides the R3 transfer tax."""
+    fig9 = {r["mode"]: r for r in results["pipeline_makespan"]
+            if r.get("topology") == "fig9"}
+    return (fig9["serialized-fcfs"]["makespan_s"]
+            / max(fig9["pipelined"]["makespan_s"], 1e-9))
+
+
+def _recovery_speedup(results: dict) -> float:
+    """From-scratch over resumed makespan — the PR-3 claim that journal
+    recovery re-executes only the lost frontier.  Wall-sensitive (the
+    absolute value swings with machine load), so only the hard bound
+    carries weight; the structural claim lives in _recovery_steps_ratio."""
+    by = _rows_by(results, "recovery_makespan", "phase")
+    return (by["from-scratch"]["makespan_s"]
+            / max(by["resumed"]["makespan_s"], 1e-9))
+
+
+def _recovery_steps_ratio(results: dict) -> float:
+    """Share of the workflow's steps the resumed run re-executed —
+    deterministic (the crash point is fixed), unlike the wall ratio.
+    1.0 would mean resume recomputed everything."""
+    by = _rows_by(results, "recovery_makespan", "phase")
+    return (by["resumed"]["steps_executed"]
+            / max(by["from-scratch"]["steps_executed"], 1))
+
+
+def _routing_makespan_ratio(results: dict) -> float:
+    """Direct over management-routed makespan — the PR-4 claim that the
+    topology planner beats the two-step baseline.  Lower is better."""
+    by = _rows_by(results, "routing_data_plane", "mode")
+    return (by["direct"]["makespan_s"]
+            / max(by["management"]["makespan_s"], 1e-9))
+
+
+def _routing_mgmt_bytes_ratio(results: dict) -> float:
+    """Share of the baseline's management-node bytes that direct routing
+    still moves through the star.  Lower is better; structural, so the
+    hard bound is tight."""
+    by = _rows_by(results, "routing_data_plane", "mode")
+    return (by["direct"]["mgmt_bytes"]
+            / max(by["management"]["mgmt_bytes"], 1))
+
+
+def _routing_direct_transfers(results: dict) -> float:
+    """Direct transfers actually executed — zero means the planner never
+    took the declared link and the feature is silently off."""
+    by = _rows_by(results, "routing_data_plane", "mode")
+    return float(by["direct"]["direct_n"])
+
+
+@dataclass
+class Metric:
+    name: str
+    extract: Callable[[dict], float]
+    higher_is_better: bool
+    rel_tol: float                  # fractional drift vs baseline == noise
+    hard_min: Optional[float] = None   # the claim itself, baseline-independent
+    hard_max: Optional[float] = None
+
+    def check(self, value: float, baseline: Optional[float]) -> List[str]:
+        errs = []
+        if self.hard_min is not None and value < self.hard_min:
+            errs.append(f"hard bound: {value:.4g} < min {self.hard_min}")
+        if self.hard_max is not None and value > self.hard_max:
+            errs.append(f"hard bound: {value:.4g} > max {self.hard_max}")
+        if baseline is not None:
+            if self.higher_is_better:
+                floor = baseline * (1.0 - self.rel_tol)
+                if value < floor:
+                    errs.append(f"regressed vs baseline {baseline:.4g} "
+                                f"(floor {floor:.4g})")
+            else:
+                ceil = baseline * (1.0 + self.rel_tol)
+                if value > ceil:
+                    errs.append(f"regressed vs baseline {baseline:.4g} "
+                                f"(ceiling {ceil:.4g})")
+        return errs
+
+
+# Tolerances are generous because CI runners differ from the machine that
+# wrote the baseline (core count changes how much compute there is to hide
+# transfers behind); the hard bounds carry the actual claims and never
+# loosen with the baseline.
+METRICS = [
+    Metric("pipeline_fig9_speedup", _pipeline_speedup,
+           higher_is_better=True, rel_tol=0.35, hard_min=1.0),
+    # wall ratio: hard bound only in practice (rel_tol spans the quiet-
+    # vs-contended-machine spread); the steps ratio is the tight check
+    Metric("recovery_speedup", _recovery_speedup,
+           higher_is_better=True, rel_tol=0.95, hard_min=1.15),
+    # the crash fires on a completion-count threshold, so the exact number
+    # of in-flight steps lost with the driver wobbles by a couple
+    Metric("recovery_steps_ratio", _recovery_steps_ratio,
+           higher_is_better=False, rel_tol=0.40, hard_max=0.95),
+    Metric("routing_makespan_ratio", _routing_makespan_ratio,
+           higher_is_better=False, rel_tol=0.25, hard_max=0.97),
+    Metric("routing_mgmt_bytes_ratio", _routing_mgmt_bytes_ratio,
+           higher_is_better=False, rel_tol=0.50, hard_max=0.10),
+    Metric("routing_direct_transfers", _routing_direct_transfers,
+           higher_is_better=True, rel_tol=0.50, hard_min=1.0),
+]
+
+
+def extract_metrics(bench: dict) -> Dict[str, float]:
+    results = bench.get("results", {})
+    out = {}
+    for m in METRICS:
+        out[m.name] = round(float(m.extract(results)), 6)
+    return out
+
+
+def main(argv=None) -> int:
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("bench_json", help="the CI run's bench.json "
+                    "(benchmarks.run --json output)")
+    ap.add_argument("--baseline", default=DEFAULT_BASELINE,
+                    help=f"committed baseline (default {DEFAULT_BASELINE})")
+    ap.add_argument("--write-baseline", action="store_true",
+                    help="write the extracted metrics to --baseline "
+                    "instead of gating against it")
+    args = ap.parse_args(argv)
+
+    with open(args.bench_json, encoding="utf-8") as fh:
+        bench = json.load(fh)
+    try:
+        metrics = extract_metrics(bench)
+    except KeyError as e:
+        print(f"FAIL cannot extract metrics: {e}", file=sys.stderr)
+        return 1
+
+    if args.write_baseline:
+        with open(args.baseline, "w", encoding="utf-8") as fh:
+            json.dump({"generated_unix": time.time(),
+                       "source": os.path.basename(args.bench_json),
+                       "metrics": metrics}, fh, indent=2)
+            fh.write("\n")
+        print(f"wrote {args.baseline}")
+        for name, value in metrics.items():
+            print(f"  {name} = {value}")
+        return 0
+
+    try:
+        with open(args.baseline, encoding="utf-8") as fh:
+            committed = json.load(fh)["metrics"]
+    except (OSError, KeyError, ValueError) as e:
+        print(f"FAIL unreadable baseline {args.baseline}: {e}",
+              file=sys.stderr)
+        return 1
+
+    failures = []
+    width = max(len(m.name) for m in METRICS)
+    for m in METRICS:
+        value = metrics[m.name]
+        base = committed.get(m.name)
+        errs = m.check(value, base)
+        arrow = "↑" if m.higher_is_better else "↓"
+        status = "ok " if not errs else "FAIL"
+        print(f"{status} {m.name:<{width}s} {arrow} value={value:<10.4g} "
+              f"baseline={base if base is not None else 'n/a'}")
+        if base is None:
+            # a metric without a committed baseline means someone added a
+            # metric but forgot to refresh baseline.json — fail loudly
+            errs.append("no committed baseline (run --write-baseline)")
+        for e in errs:
+            failures.append(f"{m.name}: {e}")
+            print(f"     {e}")
+
+    if failures:
+        print(f"\n{len(failures)} regression check(s) failed",
+              file=sys.stderr)
+        return 1
+    print("\nall benchmark-regression checks passed")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

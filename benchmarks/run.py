@@ -24,8 +24,8 @@ def _timed(fn, *a, **kw):
 
 def _sections():
     from benchmarks import (bench_deployment, bench_fault, bench_pipeline,
-                            bench_recovery, bench_scheduler, bench_timeline,
-                            bench_transfer)
+                            bench_recovery, bench_routing, bench_scheduler,
+                            bench_timeline, bench_transfer)
 
     def timeline():
         out, us = _timed(bench_timeline.run, "both")
@@ -69,6 +69,14 @@ def _sections():
         return out, us, (f"scratch={by['from-scratch']['makespan_s']}s;"
                          f"resumed={by['resumed']['makespan_s']}s")
 
+    def routing():
+        out, us = _timed(bench_routing.run)
+        by = {r["mode"]: r for r in out}
+        return out, us, (f"mgmt_bytes={by['management']['mgmt_bytes']}"
+                         f"->{by['direct']['mgmt_bytes']};"
+                         f"makespan={by['management']['makespan_s']}s"
+                         f"->{by['direct']['makespan_s']}s")
+
     return [
         ("fig8_fig9_timeline", "bench_timeline — paper Fig.8/Fig.9 "
          "(full-HPC vs hybrid)", timeline),
@@ -83,6 +91,8 @@ def _sections():
          "pipelined executor", pipeline),
         ("recovery_makespan", "bench_recovery — journal crash-recovery vs "
          "from-scratch", recovery),
+        ("routing_data_plane", "bench_routing — direct site-to-site "
+         "routing vs the R3 two-step baseline", routing),
     ]
 
 

@@ -18,7 +18,9 @@ from repro.core.scheduler import (Scheduler, Policy, DataLocalityPolicy,
                                   WidestFirstPolicy, JobDescription,
                                   JobAllocation, ResourceAllocation,
                                   JobStatus, POLICIES)
-from repro.core.datamanager import DataManager, TransferRecord
+from repro.core.datamanager import DataManager, RoutePlan, TransferRecord
+from repro.core.topology import (LinkSpec, MANAGEMENT, Route,
+                                 TopologyGraph)
 from repro.core.streamflow_file import (load as load_streamflow_file,
                                         StreamFlowConfig, Binding,
                                         StreamFlowFileError, validate)

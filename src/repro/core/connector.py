@@ -63,6 +63,14 @@ class ObjectStore:
         with self._lock:
             return path in self._data
 
+    def size(self, path: str) -> int:
+        """Byte length of a stored payload, or -1 when absent.  A metadata
+        probe: does NOT touch the bytes_in/bytes_out accounting, so
+        planners may ask freely without polluting transfer metrics."""
+        with self._lock:
+            payload = self._data.get(path)
+            return -1 if payload is None else len(payload)
+
     def delete(self, path: str):
         with self._lock:
             self._data.pop(path, None)
@@ -128,7 +136,9 @@ class Connector(abc.ABC):
     def copy(self, src: str, dst: str, kind: ConnectorCopyKind,
              source_remote: Optional[str] = None, *,
              local_store: Optional[ObjectStore] = None,
-             dest_remote: Optional[str] = None) -> int:
+             dest_remote: Optional[str] = None,
+             peer: Optional["Connector"] = None,
+             link=None) -> int:
         """Move one payload; returns bytes moved.
 
         src/dst are store paths (token keys).  ``source_remote`` /
@@ -139,6 +149,13 @@ class Connector(abc.ABC):
         management node (``link_latency_s`` per copy + ``link_bandwidth_mbps``)
         so cross-site hops have real, measurable cost — this is what the
         pipelined executor overlaps with compute.
+
+        ``REMOTE_TO_REMOTE`` with a ``peer`` connector is the *direct*
+        cross-model channel (topology-routed transfers): the payload moves
+        from this site's store straight into the peer site's store, paying
+        the declared ``link`` cost (a ``topology.LinkSpec``) and never
+        touching the management node.  Without a peer it is the classic
+        intra-model hop.
         """
         if kind is ConnectorCopyKind.LOCAL_TO_REMOTE:
             payload = local_store.get(src)
@@ -148,6 +165,14 @@ class Connector(abc.ABC):
             payload = self.store(source_remote).get(src)
             self._link_delay(len(payload))
             local_store.put(dst, payload)
+        elif peer is not None and peer.name != self.name:
+            # direct site-to-site hop over a declared topology link
+            payload = self.store(source_remote).get(src)
+            if link is not None:
+                delay = link.cost(len(payload))
+                if delay > 0:
+                    time.sleep(delay)
+            peer.store(dest_remote).put(dst, payload)
         else:  # REMOTE_TO_REMOTE within this model
             payload = self.store(source_remote).get(src)
             self.store(dest_remote).put(dst, payload)

@@ -1,13 +1,22 @@
-"""DataManager (paper §4.6): token placement registry + transfer engine.
+"""DataManager (paper §4.6): token placement registry + transfer router.
 
-R3 — with no shared data space, any inter-model transfer is still possible
-via the two-step copy through the management node; intra-model transfers use
-the connector's own channel (one hop; zero-copy when the model exposes a
-shared store, the Occam /scratch analogue).
+R3 — with no shared data space, any inter-model transfer is always
+*possible* via the two-step copy through the management node; intra-model
+transfers use the connector's own channel (one hop; zero-copy when the
+model exposes a shared store, the Occam /scratch analogue).
 
 R4 — transfers are elided when the token is already present at the target;
 a cheap local *staging* copy is still made (the paper does the same so
 in-place modifications can't corrupt inputs).
+
+Beyond-paper (flagged): with a ``TopologyGraph`` attached,
+``transfer_data`` is a *router* — every live replica of the token is a
+candidate source, every (source -> destination) route is scored against
+the declared link graph (direct site-to-site hop, sibling-LAN hop,
+management push, or the R3 two-step fallback), and the cheapest executes.
+``routing: management`` in the topology block (or no topology at all)
+keeps every inter-model move on the paper's two-step path — the measured
+control.
 
 Beyond-paper (flagged): the pipelined executor issues transfers
 *asynchronously* — ``transfer_data_async`` returns a Future so token
@@ -16,7 +25,9 @@ deduplicated per (token, destination): two consumers of one token trigger
 one physical copy, the second rides the first's Future.
 
 Every movement is appended to ``transfers`` — the benchmark harness reads
-this log to produce the paper's overhead accounting.
+this log to produce the paper's overhead accounting.  ``mgmt_bytes()``
+reports how many bytes crossed the management node's own link, the number
+direct routing exists to shrink.
 """
 from __future__ import annotations
 
@@ -28,16 +39,18 @@ from typing import Any, Dict, List, Optional, Tuple
 
 from repro.core.connector import (Connector, ConnectorCopyKind, ObjectStore,
                                   deserialize, serialize)
+from repro.core.topology import MANAGEMENT, Route, TopologyGraph
 
 
 @dataclass
 class TransferRecord:
     token: str
-    kind: str            # elided | staging | intra-model | two-step | collect
+    kind: str    # elided | staging | intra-model | direct | two-step | collect
     src: Optional[str]
     dst: str
     bytes: int
     seconds: float
+    route: str = ""          # planner's hop description, e.g. "hpc->cloud"
 
 
 @dataclass
@@ -47,12 +60,27 @@ class _Location:
     path: str
 
 
+@dataclass
+class RoutePlan:
+    """One scored way of bringing a token to a destination."""
+    kind: str                       # elided|staging|intra-model|direct|
+    #                                 mgmt-push|two-step
+    cost: float
+    source: Optional[_Location] = None     # None for mgmt-push/elided
+    route: Optional[Route] = None          # topology path, when planned
+
+    def describe(self) -> str:
+        return self.route.describe() if self.route is not None else self.kind
+
+
 class DataManager:
     def __init__(self, deployment_manager, scheduler=None, *,
-                 transfer_workers: int = 8, journal=None):
+                 transfer_workers: int = 8, journal=None,
+                 topology: Optional[TopologyGraph] = None):
         self.deployment_manager = deployment_manager
         self.scheduler = scheduler
         self.journal = journal                     # ExecutionJournal | None
+        self.topology = topology                   # TopologyGraph | None
         self._lock = threading.RLock()
         self.remote_paths: Dict[str, List[_Location]] = {}
         self.local_store = ObjectStore()           # the management node
@@ -107,18 +135,21 @@ class DataManager:
                     l for l in self.remote_paths[token] if l.model != model]
 
     def token_size(self, token: str) -> int:
+        """Size probe for schedulers/planners — called every tick, so it
+        must use the counter-neutral ``ObjectStore.size`` probe (a ``get``
+        here would inflate the byte accounting the benchmarks gate on)."""
         with self._lock:
             locs = self.remote_paths.get(token, [])
         if not locs:
-            if self.local_store.exists(token):
-                return len(self.local_store.get(token))
-            return 0
+            return max(self.local_store.size(token), 0)
         loc = locs[0]
         conn = self.deployment_manager.get_connector(loc.model)
         if conn is None:
             return 0
-        st = conn.store(loc.resource)
-        return len(st.get(loc.path)) if st.exists(loc.path) else 0
+        try:
+            return max(conn.store(loc.resource).size(loc.path), 0)
+        except KeyError:
+            return 0
 
     # -- value plane (management-node helpers) ------------------------------------
     def put_local(self, token: str, value: Any):
@@ -127,31 +158,137 @@ class DataManager:
     def get_local(self, token: str) -> Any:
         return deserialize(self.local_store.get(token))
 
-    # -- the R3/R4 transfer logic ---------------------------------------------------
+    # -- the route planner (R3/R4 + topology routing) ---------------------------
+    def _live_replicas(self, token: str) -> List[_Location]:
+        """Registered replicas whose site still answers and whose store
+        still holds the payload — the router never trusts the registry
+        blindly (a site may have died between registration and now)."""
+        with self._lock:
+            locs = list(self.remote_paths.get(token, []))
+        live = []
+        for loc in locs:
+            conn = self.deployment_manager.get_connector(loc.model)
+            if conn is None or not conn.ping(loc.resource):
+                continue
+            try:
+                if conn.store(loc.resource).exists(loc.path):
+                    live.append(loc)
+            except KeyError:
+                continue
+        return live
+
+    def plan_route(self, token: str, dst_model: str, dst_resource: str,
+                   *, dst_conn=None) -> RoutePlan:
+        """Score every live (replica source -> destination) route and
+        return the cheapest.  Routes the executor can take:
+
+          elided / staging   R4: already at (or visible from) the target
+          intra-model        sibling-LAN hop inside the destination model
+          direct             declared topology link, site to site
+          mgmt-push          the management node already holds the bytes
+          two-step           R3 fallback: source -> management -> target
+
+        Ties keep the paper's preference order (sibling replica, then
+        management push, then two-step).  With no topology — or
+        ``routing: management`` — no direct route is ever planned.
+        """
+        if dst_conn is None:
+            dst_conn = self.deployment_manager.get_connector(dst_model)
+        if dst_conn is None:
+            raise RuntimeError(f"target model {dst_model} not deployed")
+        dst_store = dst_conn.store(dst_resource)
+        live = self._live_replicas(token)
+
+        # R4: already present at the destination store?
+        present = dst_store.exists(token) or any(
+            l.model == dst_model and l.resource == dst_resource
+            for l in live)
+        if present:
+            return RoutePlan("elided", 0.0)
+        if dst_conn.shared_data_space() and any(
+                l.model == dst_model for l in live):
+            return RoutePlan("staging", 0.0)
+
+        size = max(self.token_size(token), 1)
+        topo = self.topology
+        # cost-based scoring is the *direct* routing mode; with
+        # routing="management" (or no topology) the scoring key is
+        # rank-only, which reproduces the paper's source pick exactly:
+        # sibling replica, then first registered replica, then the
+        # management node only when no replica exists
+        use_costs = topo is not None and topo.routing == "direct"
+        # (cost, preference-rank, insertion-order) -> plan; ranks keep the
+        # paper's tie-break order under the free-link default topology
+        scored: List[Tuple[Tuple[float, int, int], RoutePlan]] = []
+        for i, loc in enumerate(live):
+            if loc.model == dst_model:
+                scored.append(((0.0, 0, i),
+                               RoutePlan("intra-model", 0.0, loc)))
+            elif use_costs:
+                route = topo.route(loc.model, dst_model, size)
+                kind = ("direct" if route.hops
+                        and not route.via_management else "two-step")
+                scored.append(((route.cost, 1, i),
+                               RoutePlan(kind, route.cost, loc, route)))
+            else:
+                route = (topo.two_step_route(loc.model, dst_model, size)
+                         if topo is not None else None)
+                cost = route.cost if route is not None else 0.0
+                scored.append(((0.0, 1, i),
+                               RoutePlan("two-step", cost, loc, route)))
+        if self.local_store.exists(token):
+            if topo is not None:
+                route = topo.route(MANAGEMENT, dst_model, size)
+                cost = route.cost
+            else:
+                route, cost = None, 0.0
+            # rank 2: the paper sources from the management node only when
+            # no replica exists; in direct mode the planner may still pick
+            # it on merit (one hop beats two)
+            scored.append(((cost if use_costs else 0.0, 2, 0),
+                           RoutePlan("mgmt-push", cost, None, route)))
+        if not scored:
+            raise KeyError(f"token {token!r} exists nowhere (or every "
+                           f"replica's site is dead)")
+        return min(scored, key=lambda kv: kv[0])[1]
+
+    def estimate_cost(self, token: str, dst_model: str) -> float:
+        """Planner cost of bringing ``token`` onto ``dst_model`` — what the
+        cost-weighted scheduler policy and the executor's stage-in
+        ordering consume.  Without a topology the token's byte size is the
+        proxy (more bytes == more worth prepaying)."""
+        if self.has_replica(token, dst_model):
+            return 0.0
+        size = max(self.token_size(token), 1)
+        if self.topology is None or self.topology.routing != "direct":
+            return float(size)
+        with self._lock:
+            sources = {l.model for l in self.remote_paths.get(token, [])}
+        costs = [self.topology.cost(s, dst_model, size) for s in sources]
+        if self.local_store.exists(token):
+            costs.append(self.topology.cost(MANAGEMENT, dst_model, size))
+        return min(costs) if costs else 0.0
+
     def transfer_data(self, token: str, dst_model: str, dst_resource: str
                       ) -> TransferRecord:
-        """Ensure ``token`` is present at (dst_model, dst_resource)."""
+        """Ensure ``token`` is present at (dst_model, dst_resource), over
+        the cheapest planned route."""
         t0 = time.time()
         dst_conn = self.deployment_manager.get_connector(dst_model)
         if dst_conn is None:
             raise RuntimeError(f"target model {dst_model} not deployed")
         dst_store = dst_conn.store(dst_resource)
         with self._lock:
-            locs = list(self.remote_paths.get(token, []))
             epoch = self._model_epoch.get(dst_model, 0)
+        plan = self.plan_route(token, dst_model, dst_resource,
+                               dst_conn=dst_conn)
+        dst_tag = f"{dst_model}:{dst_resource}"
 
-        # R4: already present at the destination store?
-        present = dst_store.exists(token) or any(
-            l.model == dst_model and l.resource == dst_resource
-            for l in locs)
-        same_space = (not present and dst_conn.shared_data_space() and any(
-            l.model == dst_model for l in locs))
-        if present or same_space:
+        if plan.kind in ("elided", "staging"):
             # staging copy only (negligible vs a remote transfer — paper §4.6)
-            size = len(dst_store.get(token)) if dst_store.exists(token) else 0
-            rec = TransferRecord(token, "elided" if present else "staging",
-                                 None, f"{dst_model}:{dst_resource}",
-                                 size, time.time() - t0)
+            size = max(dst_store.size(token), 0)
+            rec = TransferRecord(token, plan.kind, None, dst_tag, size,
+                                 time.time() - t0)
             # no-op transfers have nothing to replay: keep the (fsync'd)
             # journal records off the hottest transfer path
             self._done(rec, dst_model, dst_resource, token, epoch,
@@ -161,36 +298,47 @@ class DataManager:
         if self.journal is not None:
             # write-ahead: a copy that was in flight when the driver died is
             # journaled as started-but-not-done; resume re-issues it and the
-            # R4 elision / per-token dedup make the replay idempotent
-            self.journal.transfer(token, dst_model, dst_resource, "start")
+            # R4 elision / per-token dedup make the replay idempotent.  The
+            # planned route rides along so a replayed journal shows *how*
+            # the bytes moved, not just where they went.
+            self.journal.transfer(token, dst_model, dst_resource, "start",
+                                  route=plan.describe())
 
-        # source pick: management node, else first registered replica
-        if self.local_store.exists(token) and not locs:
-            payload_len = dst_conn.copy(
-                token, token, ConnectorCopyKind.LOCAL_TO_REMOTE,
-                local_store=self.local_store, dest_remote=dst_resource)
-            rec = TransferRecord(token, "two-step", "management",
-                                 f"{dst_model}:{dst_resource}",
-                                 payload_len, time.time() - t0)
-            self._done(rec, dst_model, dst_resource, token, epoch)
-            return rec
-        if not locs:
-            raise KeyError(f"token {token!r} exists nowhere")
-        # prefer a same-model replica: a staged-in copy on a sibling
-        # resource turns this into a LAN hop instead of a second WAN copy
-        src = next((l for l in locs if l.model == dst_model), locs[0])
-        src_conn = self.deployment_manager.get_connector(src.model)
-
-        if src.model == dst_model:
-            # intra-model: the connector's own (optimised) channel
+        src = plan.source
+        src_conn = (self.deployment_manager.get_connector(src.model)
+                    if src is not None else None)
+        if src is not None and src_conn is None:
+            # the source site died between planning and execution: re-plan
+            # (liveness filtering drops its replicas on the next pass, so
+            # this converges to another source or a clean KeyError)
+            return self.transfer_data(token, dst_model, dst_resource)
+        if plan.kind == "mgmt-push":
+            # one hop: the management node already holds the payload
+            n = dst_conn.copy(token, token, ConnectorCopyKind.LOCAL_TO_REMOTE,
+                              local_store=self.local_store,
+                              dest_remote=dst_resource)
+            rec = TransferRecord(token, "two-step", "management", dst_tag,
+                                 n, time.time() - t0, plan.describe())
+        elif plan.kind == "intra-model":
+            # the connector's own (optimised) channel — the sibling-LAN hop
             n = dst_conn.copy(src.path, token,
                               ConnectorCopyKind.REMOTE_TO_REMOTE,
                               source_remote=src.resource,
                               dest_remote=dst_resource)
             rec = TransferRecord(token, "intra-model",
-                                 f"{src.model}:{src.resource}",
-                                 f"{dst_model}:{dst_resource}", n,
+                                 f"{src.model}:{src.resource}", dst_tag, n,
                                  time.time() - t0)
+        elif plan.kind == "direct":
+            # topology-routed: site to site over the declared link, never
+            # touching the management node
+            n = src_conn.copy(src.path, token,
+                              ConnectorCopyKind.REMOTE_TO_REMOTE,
+                              source_remote=src.resource,
+                              dest_remote=dst_resource, peer=dst_conn,
+                              link=plan.route.hops[0])
+            rec = TransferRecord(token, "direct",
+                                 f"{src.model}:{src.resource}", dst_tag, n,
+                                 time.time() - t0, plan.describe())
         else:
             # R3 baseline: two copies through the management node
             n1 = src_conn.copy(src.path, token,
@@ -202,9 +350,8 @@ class DataManager:
                                local_store=self.local_store,
                                dest_remote=dst_resource)
             rec = TransferRecord(token, "two-step",
-                                 f"{src.model}:{src.resource}",
-                                 f"{dst_model}:{dst_resource}", n1 + n2,
-                                 time.time() - t0)
+                                 f"{src.model}:{src.resource}", dst_tag,
+                                 n1 + n2, time.time() - t0, plan.describe())
         self._done(rec, dst_model, dst_resource, token, epoch)
         return rec
 
@@ -295,24 +442,64 @@ class DataManager:
     # -- output retrieval --------------------------------------------------------
     def collect_output(self, token: str) -> Any:
         """Bring a token back to the management node (always called before a
-        remote site is undeployed, and for local steps needing remote data)."""
+        remote site is undeployed, and for local steps needing remote data).
+
+        Replica- and liveness-aware: every registered replica is a
+        candidate (cheapest management link first, when a topology is
+        attached); replicas whose model is undeployed, whose site fails
+        the health check, or whose store lost the payload are skipped.
+        If *every* replica is dead, the journaled payload (checkpoint
+        ``include_payloads``) is the last resort."""
         if self.local_store.exists(token):
             return deserialize(self.local_store.get(token))
         with self._lock:
             locs = list(self.remote_paths.get(token, []))
-        if not locs:
-            raise KeyError(f"token {token!r} not found anywhere")
-        src = locs[0]
-        conn = self.deployment_manager.get_connector(src.model)
-        t0 = time.time()
-        n = conn.copy(src.path, token, ConnectorCopyKind.REMOTE_TO_LOCAL,
-                      source_remote=src.resource,
-                      local_store=self.local_store)
-        with self._lock:
-            self.transfers.append(TransferRecord(
-                token, "collect", f"{src.model}:{src.resource}",
-                "management", n, time.time() - t0))
-        return deserialize(self.local_store.get(token))
+        if (self.topology is not None and self.topology.routing == "direct"
+                and len(locs) > 1):
+            size = max(self.token_size(token), 1)
+            locs.sort(key=lambda l: self.topology.cost(
+                l.model, MANAGEMENT, size))
+        for src in locs:
+            conn = self.deployment_manager.get_connector(src.model)
+            if conn is None or not conn.ping(src.resource):
+                continue
+            t0 = time.time()
+            try:
+                if not conn.store(src.resource).exists(src.path):
+                    continue
+                n = conn.copy(src.path, token,
+                              ConnectorCopyKind.REMOTE_TO_LOCAL,
+                              source_remote=src.resource,
+                              local_store=self.local_store)
+            except KeyError:
+                continue            # resource vanished under us: next replica
+            with self._lock:
+                self.transfers.append(TransferRecord(
+                    token, "collect", f"{src.model}:{src.resource}",
+                    "management", n, time.time() - t0))
+            return deserialize(self.local_store.get(token))
+        raw = self._journaled_payload(token)
+        if raw is not None:
+            self.local_store.put(token, raw)
+            with self._lock:
+                self.transfers.append(TransferRecord(
+                    token, "collect", "journal", "management", len(raw), 0.0))
+            return deserialize(raw)
+        if locs:
+            raise KeyError(f"token {token!r}: every replica's site is dead "
+                           f"and no journaled payload exists")
+        raise KeyError(f"token {token!r} not found anywhere")
+
+    def _journaled_payload(self, token: str) -> Optional[bytes]:
+        """Read a token's inline payload back out of the execution journal
+        (only present when the checkpoint policy journals payloads)."""
+        if self.journal is None:
+            return None
+        try:
+            state = type(self.journal).replay(self.journal.path)
+        except Exception:
+            return None
+        return state.payloads.get(token)
 
     # -- accounting ---------------------------------------------------------------
     def transfer_summary(self) -> Dict[str, Dict[str, float]]:
@@ -324,3 +511,9 @@ class DataManager:
                 d["bytes"] += r.bytes
                 d["seconds"] += r.seconds
         return out
+
+    def mgmt_bytes(self) -> int:
+        """Bytes that crossed the management node's own link — what direct
+        routing exists to shrink (workflow inputs/outputs still pass
+        through it; relayed transfer traffic should not have to)."""
+        return self.local_store.bytes_in + self.local_store.bytes_out

@@ -58,6 +58,7 @@ from repro.core.persistence import (CheckpointConfig, ExecutionJournal,
 from repro.core.scheduler import (JobDescription, JobStatus, POLICIES,
                                   Scheduler)
 from repro.core.streamflow_file import Binding, StreamFlowConfig
+from repro.core.topology import TopologyGraph
 from repro.core.workflow import Step, Workflow, match_binding
 
 
@@ -127,20 +128,48 @@ class StreamFlowExecutor:
                  transfer_workers: int = 8,
                  prefetch_depth: int = 8,
                  deadlock_timeout_s: float = 2.0,
-                 checkpoint=None):
+                 checkpoint=None,
+                 topology=None):
         # checkpoint: CheckpointConfig | dict | journal-path str | None
         if isinstance(checkpoint, str):
             checkpoint = CheckpointConfig(journal_path=checkpoint)
         elif isinstance(checkpoint, dict):
             checkpoint = CheckpointConfig.from_dict(checkpoint)
         self.journal = ExecutionJournal.from_checkpoint(checkpoint)
+        # topology: TopologyGraph | raw ``topology:`` block dict | None
+        if isinstance(topology, dict):
+            topology = (TopologyGraph.from_config(models, topology)
+                        if topology else None)
+        self.topology = topology
+        if topology is not None:
+            # the planner and the physical simulation must agree: push the
+            # graph's management star costs down into each model's config,
+            # where Connector.copy pays them on management-relay hops.
+            # Work on copies — the caller's ModelSpecs must not inherit
+            # this executor's WAN model (a control run built from the same
+            # dict would silently pay the treatment run's star costs).
+            models = {name: ModelSpec(s.name, s.type, dict(s.config),
+                                      s.external)
+                      for name, s in models.items()}
+            for name, spec in models.items():
+                mgmt = topology.mgmt_link(name)
+                if mgmt.latency_s or mgmt.bandwidth_mbps:
+                    spec.config.setdefault("link_latency_s", mgmt.latency_s)
+                    spec.config.setdefault("link_bandwidth_mbps",
+                                           mgmt.bandwidth_mbps)
         self.deployment = DeploymentManager(models,
                                             grace_period_s=grace_period_s,
                                             journal=self.journal)
-        self.scheduler = Scheduler(POLICIES[policy]())
+        # cost-weighted placement is a *direct*-mode feature: with
+        # routing="management" the scheduler keeps the paper's binary
+        # holder-match (the measured control stays the paper's control)
+        self.scheduler = Scheduler(
+            POLICIES[policy](),
+            topology=(topology if topology is not None
+                      and topology.routing == "direct" else None))
         self.data = DataManager(self.deployment, self.scheduler,
                                 transfer_workers=transfer_workers,
-                                journal=self.journal)
+                                journal=self.journal, topology=topology)
         self.fault = fault or FaultConfig()
         self.durations = DurationTracker()
         self.max_workers = max_workers
@@ -160,6 +189,7 @@ class StreamFlowExecutor:
         kw.setdefault("policy", cfg.policy)
         kw.setdefault("grace_period_s", cfg.grace_period_s)
         kw.setdefault("fault", FaultConfig.from_dict(cfg.fault))
+        kw.setdefault("topology", cfg.topology or None)
         return cls(cfg.models, **kw)
 
     # ------------------------------------------------------------------ utils
@@ -577,28 +607,39 @@ class StreamFlowExecutor:
                   avail: Dict[str, List[str]]):
         """Prefetch inputs of slot-starved steps onto their bound site so the
         cross-site hop is already paid when a worker slot frees (the
-        follow-up move is an intra-model copy or an R4 elision)."""
-        for path in still[:self.prefetch_depth]:
+        follow-up move is an intra-model copy or an R4 elision).
+
+        Candidates are ordered by the transfer planner's estimated route
+        cost, most expensive first: with a bounded prefetch budget, the
+        WAN hops worth prepaying beat the near-free LAN moves (which cost
+        nothing at schedule time anyway)."""
+        ranked: List[tuple] = []      # (-est_cost, queue_pos, path, tokens)
+        for pos, path in enumerate(still):
             b = self._resolve_binding(path, bindings)
-            resources = avail.get(path) or []
-            if not resources:
+            if not avail.get(path):
                 continue
             step = workflow.steps[path]
-            tokens = [t for t in step.inputs.values()
-                      if not self.data.has_replica(t, b.model)]
-            if not tokens:
-                continue                        # already staged on the site
-            # the exact resource doesn't matter: once any replica is on the
-            # site, the schedule-time move is an intra-model copy (LAN) or
-            # an R4 elision — the WAN hop is what stage-in prepays
-            target = resources[0]
-            for token in tokens:
+            tokens, est = [], 0.0
+            for t in step.inputs.values():
+                if self.data.has_replica(t, b.model):
+                    continue
                 # a token whose holder died has no source until the retry
                 # machinery recomputes it — don't spam the pool with copies
                 # doomed to fail
-                if not (self.data.local_store.exists(token)
-                        or self.data.locations(token)):
+                if not (self.data.local_store.exists(t)
+                        or self.data.locations(t)):
                     continue
+                tokens.append(t)
+                est += self.data.estimate_cost(t, b.model)
+            if tokens and est > 0:
+                ranked.append((-est, pos, path, b, tokens))
+        ranked.sort(key=lambda r: r[:2])
+        for _, _, path, b, tokens in ranked[:self.prefetch_depth]:
+            # the exact resource doesn't matter: once any replica is on the
+            # site, the schedule-time move is an intra-model copy (LAN) or
+            # an R4 elision — the WAN hop is what stage-in prepays
+            target = avail[path][0]
+            for token in tokens:
                 self.data.transfer_data_async(token, b.model, target)
 
     def _launch(self, workflow, path, binding, resource, running, pool,

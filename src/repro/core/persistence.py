@@ -97,6 +97,9 @@ class JournalState:
     payloads: Dict[str, bytes] = field(default_factory=dict)
     deployments: Dict[str, str] = field(default_factory=dict)  # model -> last
     transfers_inflight: Set[Tuple[str, str, str]] = field(default_factory=set)
+    # (token, dst_model, dst_resource) -> last journaled planner route
+    transfer_routes: Dict[Tuple[str, str, str], str] = \
+        field(default_factory=dict)
     scheduler_snapshot: Optional[dict] = None
     run_ended: bool = False
     dropped_tail_lines: int = 0
@@ -262,9 +265,14 @@ class ExecutionJournal:
         return True
 
     def transfer(self, token: str, dst_model: str, dst_resource: str,
-                 state: str):
+                 state: str, route: Optional[str] = None):
+        """``route`` is the planner's hop description (e.g. "hpc->cloud" or
+        "hpc->mgmt->cloud") so a replayed journal shows *how* a routed
+        transfer moved, not just where it went — resume re-issues it
+        through the planner, which re-routes against the live topology."""
+        fields = {} if route is None else {"route": route}
         self.append("transfer", token=token, dst_model=dst_model,
-                    dst_resource=dst_resource, state=state)
+                    dst_resource=dst_resource, state=state, **fields)
 
     def deployment(self, model: str, event: str):
         self.append("deployment", model=model, event=event)
@@ -354,6 +362,8 @@ class ExecutionJournal:
             st.payloads[rec["token"]] = _unb64(rec["payload"])
         elif kind == "transfer":
             key = (rec["token"], rec["dst_model"], rec["dst_resource"])
+            if rec.get("route"):
+                st.transfer_routes[key] = rec["route"]
             if rec["state"] == "start":
                 st.transfers_inflight.add(key)
             else:

@@ -76,6 +76,17 @@ def _loc_resource(loc) -> str:
     return getattr(loc, "resource")
 
 
+def _loc_model(loc, resources: Dict[str, "ResourceAllocation"]
+               ) -> Optional[str]:
+    """Model holding a replica: the _Location's own field when present,
+    else resolved through the resource registry (tuple-shaped entries)."""
+    model = getattr(loc, "model", None)
+    if model is not None:
+        return model
+    res = resources.get(_loc_resource(loc))
+    return res.model if res is not None else None
+
+
 class Policy(abc.ABC):
     @abc.abstractmethod
     def get_resource(self, job_description: JobDescription,
@@ -98,9 +109,24 @@ def _free(name: str, resources: Dict[str, ResourceAllocation]) -> bool:
 
 
 class DataLocalityPolicy(Policy):
-    """The paper's default: largest dependency's holder first, if free."""
+    """The paper's default: largest dependency's holder first, if free.
+
+    Beyond-paper (flagged): with a ``topology`` attached (the executor
+    sets it from the StreamFlow file's ``topology:`` block), holder-match
+    becomes *cost-weighted* — every free resource is scored by the
+    planner's estimated cost of moving the job's dependencies to its
+    model, and the cheapest wins.  A resource holding the data still
+    scores 0, so the paper's behaviour is the zero-cost special case.
+    """
+
+    topology = None                      # TopologyGraph | None
 
     def get_resource(self, job, available, remote_paths, jobs, resources):
+        if self.topology is not None and job.data_deps:
+            target = _cost_target(job, available, remote_paths, resources,
+                                  self.topology)
+            if target is not None:
+                return target
         target = _locality_target(job, available, remote_paths, resources)
         if target is not None:
             return target
@@ -153,6 +179,46 @@ def _locality_target(job: JobDescription, candidates,
                     and _fits(job, resources[resource])):
                 return resource
     return None
+
+
+def _cost_target(job: JobDescription, candidates,
+                 remote_paths: RemotePaths,
+                 resources: Dict[str, ResourceAllocation],
+                 topology) -> Optional[str]:
+    """Cost-weighted locality (beyond-paper): score each free, fitting
+    candidate by the link-graph cost of assembling the job's dependencies
+    on its model — cheapest replica per token, management push when no
+    replica exists — and take the argmin.  Cost ties break toward the
+    candidate already holding the most dependency bytes (then queue
+    order), so with free links this degenerates to the paper's
+    holder-match rather than first-free."""
+    from repro.core.topology import MANAGEMENT
+    best, best_key = None, None
+    for cand in candidates:
+        res = resources.get(cand)
+        if res is None or res.jobs or not _fits(job, res):
+            continue
+        total, held = 0.0, 0
+        for token, size in job.data_deps.items():
+            costs = []
+            for loc in remote_paths.get(token, []):
+                if _loc_resource(loc) == cand:
+                    held += max(size, 1)
+                src_model = _loc_model(loc, resources)
+                if src_model is None:
+                    continue
+                costs.append(topology.cost(src_model, res.model,
+                                           max(size, 1)))
+            # no replica anywhere: the bytes come down from the
+            # management node wherever the job lands
+            total += min(costs) if costs else topology.cost(
+                MANAGEMENT, res.model, max(size, 1))
+        key = (total, -held)
+        if best_key is None or (key[0] < best_key[0] - 1e-12
+                                or (abs(key[0] - best_key[0]) <= 1e-12
+                                    and key[1] < best_key[1])):
+            best, best_key = cand, key
+    return best
 
 
 class BackfillPolicy(Policy):
@@ -291,11 +357,24 @@ class Scheduler:
     (``schedule_batch``, the pipelined executor's contract) — queue-aware
     policies see every fireable job before any placement is committed."""
 
-    def __init__(self, policy: Optional[Policy] = None):
+    def __init__(self, policy: Optional[Policy] = None, *, topology=None):
         self.policy = policy or DataLocalityPolicy()
         self.jobs: Dict[str, JobAllocation] = {}
         self.resources: Dict[str, ResourceAllocation] = {}
         self._lock = threading.RLock()
+        self.topology = None
+        if topology is not None:
+            self.set_topology(topology)
+
+    def set_topology(self, topology):
+        """Attach the link-cost graph: locality policies become
+        cost-weighted (the queue-aware wrappers delegate placement to an
+        inner DataLocalityPolicy, which gets the graph too)."""
+        self.topology = topology
+        self.policy.topology = topology
+        inner = getattr(self.policy, "inner", None)
+        if inner is not None:
+            inner.topology = topology
 
     def register_resource(self, name: str, model: str, service: str,
                           cores: int, memory_gb: float):

@@ -47,6 +47,9 @@ class StreamFlowConfig:
     grace_period_s: Optional[float] = None
     fault: Dict[str, Any] = field(default_factory=dict)
     checkpoint: Dict[str, Any] = field(default_factory=dict)
+    # the ``topology:`` block — inter-site links + routing mode; an empty
+    # dict means the paper's management-node star (two-step only)
+    topology: Dict[str, Any] = field(default_factory=dict)
 
 
 def _check(cond: bool, msg: str):
@@ -140,10 +143,21 @@ def load(path_or_doc) -> StreamFlowConfig:
         _check(bool(ckpt["journal_path"]),
                "checkpoint.journal_path must be non-empty")
 
+    topology = doc.get("topology", {})
+    for i, link in enumerate(topology.get("links", [])):
+        for end in ("source", "target"):
+            _check(link[end] in models,
+                   f"topology.links[{i}].{end}: unknown model "
+                   f"{link[end]!r}")
+        _check(link["source"] != link["target"],
+               f"topology.links[{i}]: source == target "
+               f"({link['source']!r}); intra-model moves are always LAN")
+
     sched = doc.get("scheduling", {})
     return StreamFlowConfig(
         models=models, workflows=workflows,
         policy=sched.get("policy", "data_locality"),
         grace_period_s=sched.get("grace_period_s"),
         fault=doc.get("fault", {}),
-        checkpoint=ckpt)
+        checkpoint=ckpt,
+        topology=topology)

@@ -1,0 +1,112 @@
+"""The CI benchmark-regression gate: metric extraction + pass/fail
+semantics against the committed baseline."""
+import json
+import os
+import sys
+
+import pytest
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), ".."))
+from benchmarks import compare  # noqa: E402
+
+
+def _bench(*, serial=1.0, piped=0.5, scratch=3.0, resumed=1.0,
+           scratch_steps=13, resumed_steps=10,
+           mgmt_direct=100, mgmt_baseline=100_000, mk_direct=0.7,
+           mk_mgmt=1.0, direct_n=8):
+    return {"results": {
+        "pipeline_makespan": [
+            {"topology": "fig9", "mode": "serialized-fcfs",
+             "makespan_s": serial},
+            {"topology": "fig9", "mode": "pipelined", "makespan_s": piped},
+            {"topology": "fig8", "mode": "pipelined", "makespan_s": 9.9},
+        ],
+        "recovery_makespan": [
+            {"phase": "from-scratch", "makespan_s": scratch,
+             "steps_executed": scratch_steps},
+            {"phase": "resumed", "makespan_s": resumed,
+             "steps_executed": resumed_steps},
+        ],
+        "routing_data_plane": [
+            {"mode": "management", "makespan_s": mk_mgmt,
+             "mgmt_bytes": mgmt_baseline, "direct_n": 0},
+            {"mode": "direct", "makespan_s": mk_direct,
+             "mgmt_bytes": mgmt_direct, "direct_n": direct_n},
+        ],
+    }}
+
+
+def test_extract_metrics():
+    m = compare.extract_metrics(_bench())
+    assert m["pipeline_fig9_speedup"] == pytest.approx(2.0)
+    assert m["recovery_speedup"] == pytest.approx(3.0)
+    assert m["recovery_steps_ratio"] == pytest.approx(10 / 13)
+    assert m["routing_makespan_ratio"] == pytest.approx(0.7)
+    assert m["routing_mgmt_bytes_ratio"] == pytest.approx(0.001)
+    assert m["routing_direct_transfers"] == 8.0
+
+
+def _run(tmp_path, bench, baseline_bench=None, argv_extra=()):
+    bj = tmp_path / "bench.json"
+    bj.write_text(json.dumps(bench))
+    base = tmp_path / "baseline.json"
+    base.write_text(json.dumps({"metrics": compare.extract_metrics(
+        baseline_bench or bench)}))
+    return compare.main([str(bj), "--baseline", str(base), *argv_extra])
+
+
+def test_gate_passes_on_baseline_itself(tmp_path, capsys):
+    assert _run(tmp_path, _bench()) == 0
+    assert "all benchmark-regression checks passed" in capsys.readouterr().out
+
+
+def test_gate_fails_on_makespan_regression(tmp_path, capsys):
+    # direct routing suddenly slower than the two-step control
+    assert _run(tmp_path, _bench(mk_direct=1.05)) == 1
+    assert "routing_makespan_ratio" in capsys.readouterr().out
+
+
+def test_gate_fails_on_mgmt_bytes_regression(tmp_path, capsys):
+    # bytes leak back through the management node (hard bound 0.10)
+    assert _run(tmp_path, _bench(mgmt_direct=50_000)) == 1
+    out = capsys.readouterr().out
+    assert "routing_mgmt_bytes_ratio" in out and "hard bound" in out
+
+
+def test_gate_fails_when_pipelining_stops_helping(tmp_path):
+    assert _run(tmp_path, _bench(piped=1.2)) == 1
+
+
+def test_gate_tolerates_noise_within_rel_tol(tmp_path):
+    good = _bench()
+    noisy = _bench(piped=0.55, resumed=1.3, mk_direct=0.75)
+    assert _run(tmp_path, noisy, baseline_bench=good) == 0
+
+
+def test_gate_fails_when_resume_recomputes_everything(tmp_path, capsys):
+    assert _run(tmp_path, _bench(resumed_steps=13)) == 1
+    assert "recovery_steps_ratio" in capsys.readouterr().out
+
+
+def test_gate_fails_on_missing_benchmark_section(tmp_path, capsys):
+    bench = _bench()
+    del bench["results"]["routing_data_plane"]
+    bj = tmp_path / "bench.json"
+    bj.write_text(json.dumps(bench))
+    assert compare.main([str(bj)]) == 1
+
+
+def test_write_baseline_roundtrip(tmp_path):
+    bench = _bench()
+    bj = tmp_path / "bench.json"
+    bj.write_text(json.dumps(bench))
+    base = tmp_path / "baseline.json"
+    assert compare.main([str(bj), "--baseline", str(base),
+                         "--write-baseline"]) == 0
+    assert compare.main([str(bj), "--baseline", str(base)]) == 0
+
+
+def test_committed_baseline_has_every_metric():
+    with open(compare.DEFAULT_BASELINE, encoding="utf-8") as fh:
+        committed = json.load(fh)["metrics"]
+    assert set(committed) == {m.name for m in compare.METRICS}

@@ -1,0 +1,404 @@
+"""Topology-aware transfer routing: direct site-to-site links, the
+two-step R3 fallback, liveness-aware replica choice, and the
+cost-weighted scheduler policy fed by the same link graph."""
+import time
+
+import pytest
+
+from repro.core import (DataManager, DataLocalityPolicy, DeploymentManager,
+                        JobDescription, MANAGEMENT, ModelSpec,
+                        Scheduler, StreamFlowFileError, TopologyGraph,
+                        load_streamflow_file, serialize)
+from repro.core.datamanager import _Location
+from repro.core.persistence import ExecutionJournal
+from repro.core.workflow import Requirements
+
+
+def _specs():
+    return {
+        "hpc": ModelSpec("hpc", "local",
+                         {"services": {"x": {"replicas": 2}}}),
+        "cloud": ModelSpec("cloud", "local",
+                           {"services": {"y": {"replicas": 2}}}),
+    }
+
+
+def _world(topology_doc=None, journal=None):
+    specs = _specs()
+    topo = (TopologyGraph.from_config(specs, topology_doc)
+            if topology_doc is not None else None)
+    dm = DeploymentManager(specs)
+    dm.deploy("hpc")
+    dm.deploy("cloud")
+    return dm, DataManager(dm, topology=topo, journal=journal)
+
+
+WAN_STAR = {"latency_s": 0.05, "bandwidth_mbps": 200}
+
+
+# -- route choice ------------------------------------------------------------
+
+def test_direct_link_beats_two_step():
+    dm, d = _world({"management": WAN_STAR,
+                    "links": [{"source": "hpc", "target": "cloud",
+                               "latency_s": 0.001,
+                               "bandwidth_mbps": 1000}]})
+    d.put_local("tok", b"x" * 1000)
+    d.transfer_data("tok", "hpc", "hpc/x/0")
+    before = d.mgmt_bytes()
+    rec = d.transfer_data("tok", "cloud", "cloud/y/0")
+    assert rec.kind == "direct" and rec.route == "hpc->cloud"
+    # the payload never touched the management node's store
+    assert d.mgmt_bytes() == before
+    assert ("cloud/y/0", "tok") in d.locations("tok")
+
+
+def test_expensive_direct_link_loses_to_two_step():
+    dm, d = _world({"management": {"latency_s": 0.0},
+                    "links": [{"source": "hpc", "target": "cloud",
+                               "latency_s": 9.0}]})
+    d.put_local("tok", b"x" * 100)
+    d.transfer_data("tok", "hpc", "hpc/x/0")
+    rec = d.transfer_data("tok", "cloud", "cloud/y/0")
+    assert rec.kind == "two-step"
+
+
+def test_asymmetric_link_costs_route_each_way_differently():
+    # hpc -> cloud has a fat one-way pipe; cloud -> hpc must relay (R3)
+    dm, d = _world({"management": WAN_STAR,
+                    "links": [{"source": "hpc", "target": "cloud",
+                               "latency_s": 0.0, "bandwidth_mbps": 0,
+                               "symmetric": False}]})
+    d.put_local("a", b"a" * 500)
+    d.transfer_data("a", "hpc", "hpc/x/0")
+    assert d.transfer_data("a", "cloud", "cloud/y/0").kind == "direct"
+
+    d.put_local("b", b"b" * 500)
+    d.transfer_data("b", "cloud", "cloud/y/1")
+    # drop the management-node copy so the cloud replica is the only
+    # source; with no cloud->hpc link the R3 relay is all that's left
+    d.local_store.delete("b")
+    rec = d.transfer_data("b", "hpc", "hpc/x/1")
+    assert rec.kind == "two-step"
+    assert rec.route == "cloud->mgmt->hpc"
+
+
+def test_routing_management_is_the_off_switch():
+    # a free direct link exists but routing=management ignores it (R3 control)
+    dm, d = _world({"routing": "management",
+                    "links": [{"source": "hpc", "target": "cloud"}]})
+    d.put_local("tok", b"x" * 100)
+    d.transfer_data("tok", "hpc", "hpc/x/0")
+    assert d.transfer_data("tok", "cloud", "cloud/y/0").kind == "two-step"
+
+
+def test_no_topology_keeps_paper_behaviour():
+    dm, d = _world(None)
+    d.put_local("tok", b"x" * 100)
+    d.transfer_data("tok", "hpc", "hpc/x/0")
+    assert d.transfer_data("tok", "cloud", "cloud/y/0").kind == "two-step"
+
+
+def test_mgmt_push_wins_when_replica_relay_costs_more():
+    # token is on hpc AND still at the management node; pushing down one
+    # star edge beats relaying up+down two of them
+    dm, d = _world({"management": WAN_STAR})
+    d.put_local("tok", b"x" * 100)
+    d.transfer_data("tok", "hpc", "hpc/x/0")
+    rec = d.transfer_data("tok", "cloud", "cloud/y/0")
+    assert rec.kind == "two-step" and rec.route == "mgmt->cloud"
+
+
+# -- liveness ----------------------------------------------------------------
+
+def test_router_skips_dead_replica_source():
+    dm, d = _world({"links": [{"source": "hpc", "target": "cloud"}]})
+    d.put_local("tok", b"x" * 100)
+    d.transfer_data("tok", "hpc", "hpc/x/0")
+    dm.undeploy("hpc")           # get_connector("hpc") now returns None
+    rec = d.transfer_data("tok", "cloud", "cloud/y/0")
+    assert rec.kind == "two-step" and rec.src == "management"
+
+
+def test_site_dropped_mid_route_is_epoch_fenced():
+    # a slow direct link (still cheaper than the relay): drop the
+    # destination while the copy is in flight; the landing payload must
+    # not register a replica on the new epoch
+    dm, d = _world({"management": {"latency_s": 0.5},
+                    "links": [{"source": "hpc", "target": "cloud",
+                               "latency_s": 0.3}]})
+    d.put_local("tok", b"x" * 100)
+    d.transfer_data("tok", "hpc", "hpc/x/0")
+    d.local_store.delete("tok")  # force the direct (slow-link) route
+    fut = d.transfer_data_async("tok", "cloud", "cloud/y/0")
+    time.sleep(0.1)              # copy is sleeping out the link latency
+    d.drop_model("cloud")
+    rec = fut.result()
+    assert rec.kind == "direct"
+    assert not d.has_replica("tok", "cloud")
+
+
+def test_collect_output_skips_undeployed_first_replica():
+    # regression: locs[0] on an undeployed model crashed with
+    # AttributeError (get_connector returned None); now it falls through
+    dm, d = _world(None)
+    conn = dm.get_connector("hpc")
+    conn.store("hpc/x/0").put("result", serialize({"a": 1}))
+    d.add_remote_path_mapping("hpc", "hpc/x/0", "result")
+    conn = dm.get_connector("cloud")
+    conn.store("cloud/y/0").put("result", serialize({"a": 1}))
+    d.add_remote_path_mapping("cloud", "cloud/y/0", "result")
+    dm.undeploy("hpc")
+    assert d.collect_output("result") == {"a": 1}
+
+
+def test_collect_output_all_replicas_dead_uses_journal_payload(tmp_path):
+    journal = ExecutionJournal(str(tmp_path / "j.jsonl"),
+                               include_payloads=True)
+    dm, d = _world(None, journal=journal)
+    journal.step("/s", "fireable")   # replay needs >=1 usable record
+    conn = dm.get_connector("hpc")
+    conn.store("hpc/x/0").put("result", serialize({"answer": 42}))
+    d.add_remote_path_mapping("hpc", "hpc/x/0", "result")
+    d.journal_payload("result")
+    dm.undeploy("hpc")
+    dm.undeploy("cloud")
+    assert d.collect_output("result") == {"answer": 42}
+    kinds = [(r.kind, r.src) for r in d.transfers]
+    assert ("collect", "journal") in kinds
+
+
+def test_collect_output_all_dead_no_payload_raises(tmp_path):
+    journal = ExecutionJournal(str(tmp_path / "j.jsonl"),
+                               include_payloads=False)
+    dm, d = _world(None, journal=journal)
+    conn = dm.get_connector("hpc")
+    conn.store("hpc/x/0").put("result", serialize(1))
+    d.add_remote_path_mapping("hpc", "hpc/x/0", "result")
+    d.journal_payload("result")  # no-op: payloads disabled
+    dm.undeploy("hpc")
+    with pytest.raises(KeyError, match="every replica's site is dead"):
+        d.collect_output("result")
+
+
+def test_source_dropped_between_plan_and_copy_replans():
+    # the source site dies after plan_route picked it but before the copy
+    # runs: transfer_data must re-plan (here: fall back to the management
+    # copy), not crash on a None connector
+    dm, d = _world(None)
+    d.put_local("tok", b"x" * 100)
+    d.transfer_data("tok", "hpc", "hpc/x/0")
+    real_plan = d.plan_route
+    raced = []
+
+    def racy_plan(token, dst_model, dst_resource, **kw):
+        plan = real_plan(token, dst_model, dst_resource, **kw)
+        if not raced and plan.source is not None:
+            raced.append(plan.source.model)
+            dm.undeploy(plan.source.model)
+        return plan
+
+    d.plan_route = racy_plan
+    rec = d.transfer_data("tok", "cloud", "cloud/y/0")
+    assert raced == ["hpc"]
+    assert rec.kind == "two-step" and rec.src == "management"
+
+
+def test_size_probes_leave_byte_accounting_alone():
+    # token_size/estimate_cost run every scheduler tick; they must not
+    # inflate the mgmt_bytes metric the CI benchmark gate reads
+    dm, d = _world(None)
+    d.put_local("tok", b"x" * 1000)
+    before = d.mgmt_bytes()
+    for _ in range(50):
+        assert d.token_size("tok") > 0
+        d.estimate_cost("tok", "cloud")
+    assert d.mgmt_bytes() == before
+
+
+# -- the journal records routes ----------------------------------------------
+
+def test_journal_records_planned_route(tmp_path):
+    journal = ExecutionJournal(str(tmp_path / "j.jsonl"))
+    dm, d = _world({"links": [{"source": "hpc", "target": "cloud",
+                               "latency_s": 0.0}]}, journal=journal)
+    journal.step("/s", "fireable")   # replay needs >=1 usable record
+    d.put_local("tok", b"x" * 100)
+    d.transfer_data("tok", "hpc", "hpc/x/0")
+    d.transfer_data("tok", "cloud", "cloud/y/0")
+    state = ExecutionJournal.replay(journal.path)
+    assert state.transfer_routes[("tok", "cloud", "cloud/y/0")] \
+        == "hpc->cloud"
+    assert not state.transfers_inflight     # start matched by done
+
+
+# -- graph + schema ----------------------------------------------------------
+
+def test_topology_graph_routes_and_costs():
+    g = TopologyGraph()
+    g.add_site("a", mgmt_latency_s=0.05, mgmt_bandwidth_mbps=100)
+    g.add_site("b", mgmt_latency_s=0.05, mgmt_bandwidth_mbps=100)
+    g.add_link("a", "b", latency_s=0.01, bandwidth_mbps=1000)
+    mb = 1_000_000
+    direct = g.route("a", "b", mb)
+    assert direct.describe() == "a->b" and not direct.via_management
+    assert direct.cost == pytest.approx(0.01 + 8 / 1000)
+    two = g.two_step_route("a", "b", mb)
+    assert two.cost == pytest.approx(2 * (0.05 + 8 / 100))
+    assert g.route("a", "a", mb).cost == 0.0
+    assert g.route(MANAGEMENT, "b", mb).describe() == "mgmt->b"
+
+
+def test_topology_unknown_model_in_link_rejected():
+    with pytest.raises(KeyError, match="unknown"):
+        TopologyGraph.from_config(_specs(),
+                                  {"links": [{"source": "hpc",
+                                              "target": "nope"}]})
+
+
+def test_streamflow_file_topology_block():
+    doc = {
+        "version": "v1.0",
+        "models": {"pool": {"type": "local", "config": {
+            "services": {"node": {"replicas": 2}}}}},
+        "workflows": {"demo": {"type": "python", "config": {
+            "module": "repro.configs.recovery_demo",
+            "args": {"n_blocks": 2, "block_rows": 8, "rounds": 1}},
+            "bindings": [{"step": "/",
+                          "target": {"model": "pool",
+                                     "service": "node"}}]}},
+        "topology": {"routing": "direct",
+                     "management": {"latency_s": 0.01},
+                     "links": []},
+    }
+    cfg = load_streamflow_file(doc)
+    assert cfg.topology["routing"] == "direct"
+
+    doc["topology"]["links"] = [{"source": "pool", "target": "ghost"}]
+    with pytest.raises(StreamFlowFileError, match="unknown model"):
+        load_streamflow_file(doc)
+
+    doc["topology"]["links"] = [{"source": "pool", "target": "pool"}]
+    with pytest.raises(StreamFlowFileError, match="source == target"):
+        load_streamflow_file(doc)
+
+    doc["topology"]["links"] = []
+    doc["topology"]["routing"] = "carrier-pigeon"
+    with pytest.raises(StreamFlowFileError, match="not one of"):
+        load_streamflow_file(doc)
+
+
+# -- end-to-end through the executor ------------------------------------------
+
+def test_executor_hybrid_direct_vs_management_routing():
+    """Same Fig.9-shaped hybrid run under both routing modes: identical
+    outputs, but direct mode keeps relay traffic off the management node
+    and actually uses the declared link."""
+    from repro.core import StreamFlowExecutor, load_streamflow_file
+    from repro.configs.paper_pipeline import streamflow_doc_hybrid
+
+    def _doc(routing):
+        d = streamflow_doc_hybrid(n_chains=2, train_steps=1,
+                                  rows_per_chain=6, seq_len=16, batch=2,
+                                  vocab=64, d_model=16)
+        d["topology"] = {
+            "routing": routing,
+            "management": {"latency_s": 0.01, "bandwidth_mbps": 500},
+            "links": [{"source": "occam", "target": "garr_cloud",
+                       "latency_s": 0.001, "bandwidth_mbps": 5000}],
+        }
+        return d
+
+    got = {}
+    for routing in ("management", "direct"):
+        cfg = load_streamflow_file(_doc(routing))
+        ex = StreamFlowExecutor.from_config(cfg)
+        entry = cfg.workflows["single-cell"]
+        res = ex.run(entry.workflow, entry.bindings, inputs={"seed": 0})
+        got[routing] = (res, ex.data.transfer_summary(),
+                        ex.data.mgmt_bytes())
+
+    assert sorted(got["direct"][0].outputs) \
+        == sorted(got["management"][0].outputs)
+    assert got["direct"][1].get("direct", {}).get("n", 0) >= 1
+    assert "direct" not in got["management"][1]
+    assert got["direct"][2] < got["management"][2]
+
+
+# -- cost-weighted scheduling -------------------------------------------------
+
+def _topo_three_sites():
+    g = TopologyGraph()
+    g.add_site("src", mgmt_latency_s=0.1)
+    g.add_site("siteA", mgmt_latency_s=0.1)
+    g.add_site("siteB", mgmt_latency_s=0.1)
+    g.add_link("src", "siteB", latency_s=0.001)
+    return g
+
+
+def test_scheduler_cost_weighted_picks_cheap_link_target():
+    s = Scheduler(DataLocalityPolicy(), topology=_topo_three_sites())
+    s.register_resource("r_src", "src", "svc", 2, 4)
+    s.register_resource("rA", "siteA", "svc", 2, 4)
+    s.register_resource("rB", "siteB", "svc", 2, 4)
+    # the holder itself is busy, so binary holder-match finds nothing and
+    # would fall back to FCFS order (rA); the cost model knows src->siteB
+    # is a cheap direct hop while src->siteA relays through management
+    s.resources["r_src"].jobs.append("occupant")
+    rp = {"tok": [_Location("src", "r_src", "tok")]}
+    job = JobDescription("j", Requirements(1, 1), {"tok": 1000}, "svc")
+    assert s.schedule(job, ["rA", "rB"], rp) == "rB"
+
+
+def test_scheduler_cost_weighted_holder_still_wins_when_free():
+    s = Scheduler(DataLocalityPolicy(), topology=_topo_three_sites())
+    s.register_resource("r_src", "src", "svc", 2, 4)
+    s.register_resource("rA", "siteA", "svc", 2, 4)
+    rp = {"tok": [_Location("src", "r_src", "tok")]}
+    job = JobDescription("j", Requirements(1, 1), {"tok": 1000}, "svc")
+    assert s.schedule(job, ["rA", "r_src"], rp) == "r_src"
+
+
+def test_cost_tie_breaks_toward_the_data_holder():
+    # free links everywhere: every candidate costs 0.0, but the paper's
+    # holder-match must still win over first-free
+    g = TopologyGraph()
+    for site in ("mA", "mB"):
+        g.add_site(site)
+    s = Scheduler(DataLocalityPolicy(), topology=g)
+    s.register_resource("rA", "mA", "svc", 2, 4)
+    s.register_resource("rB", "mB", "svc", 2, 4)
+    rp = {"tok": [_Location("mB", "rB", "tok")]}
+    job = JobDescription("j", Requirements(1, 1), {"tok": 100}, "svc")
+    assert s.schedule(job, ["rA", "rB"], rp) == "rB"
+
+
+def test_management_mode_keeps_paper_scheduler_and_specs_unmutated():
+    # routing=management must be the paper's control end to end: no
+    # cost-weighted placement, and the caller's ModelSpec configs must
+    # not inherit the executor's WAN model
+    from repro.core import StreamFlowExecutor
+
+    specs = _specs()
+    topo_doc = {"routing": "management",
+                "management": {"latency_s": 0.07, "bandwidth_mbps": 150}}
+    ex = StreamFlowExecutor(specs, topology=topo_doc)
+    assert ex.scheduler.topology is None
+    assert getattr(ex.scheduler.policy, "topology", None) is None
+    assert "link_latency_s" not in specs["hpc"].config
+    # ...while the executor's own (copied) specs did get the star costs
+    assert ex.deployment._specs["hpc"].config["link_latency_s"] == 0.07
+
+    ex2 = StreamFlowExecutor(specs, topology={**topo_doc,
+                                              "routing": "direct"})
+    assert ex2.scheduler.topology is not None
+    assert "link_latency_s" not in specs["hpc"].config
+
+
+def test_scheduler_without_topology_unchanged_binary_match():
+    s = Scheduler(DataLocalityPolicy())
+    s.register_resource("r0", "m", "svc", 2, 4)
+    s.register_resource("r1", "m", "svc", 2, 4)
+    rp = {"tok": [("r1", "tok")]}
+    job = JobDescription("j", Requirements(1, 1), {"tok": 10}, "svc")
+    assert s.schedule(job, ["r0", "r1"], rp) == "r1"
