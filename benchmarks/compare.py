@@ -94,6 +94,32 @@ def _routing_direct_transfers(results: dict) -> float:
     return float(by["direct"]["direct_n"])
 
 
+def _scatter_makespan_ratio(results: dict) -> float:
+    """Scatter over hand-unrolled makespan on the Fig.9 hybrid — the PR-5
+    claim that the Port/Token scatter expression costs nothing vs
+    unrolling the DAG by hand (its per-invocation multi-site placement
+    may even win).  Lower is better."""
+    by = _rows_by(results, "scatter_width", "mode")
+    return (by["scatter"]["makespan_s"]
+            / max(by["hand-unrolled"]["makespan_s"], 1e-9))
+
+
+def _scatter_count_sites(results: dict) -> float:
+    """Distinct sites that hosted /count invocations in scatter mode —
+    below 2 means one declared scatter no longer spreads across the
+    hybrid and per-invocation placement is silently off."""
+    by = _rows_by(results, "scatter_width", "mode")
+    return float(by["scatter"]["count_sites"])
+
+
+def _scatter_invocations_ratio(results: dict) -> float:
+    """Executed over planned invocations in scatter mode — deterministic;
+    anything but 1.0 means the expansion lost or duplicated work."""
+    by = _rows_by(results, "scatter_width", "mode")
+    return (by["scatter"]["invocations"]
+            / max(by["scatter"]["planned"], 1))
+
+
 @dataclass
 class Metric:
     name: str
@@ -144,6 +170,14 @@ METRICS = [
            higher_is_better=False, rel_tol=0.50, hard_max=0.10),
     Metric("routing_direct_transfers", _routing_direct_transfers,
            higher_is_better=True, rel_tol=0.50, hard_min=1.0),
+    Metric("scatter_makespan_ratio", _scatter_makespan_ratio,
+           higher_is_better=False, rel_tol=0.30, hard_max=1.25),
+    # structural: the scatter must really spread and really run everything
+    Metric("scatter_count_sites", _scatter_count_sites,
+           higher_is_better=True, rel_tol=0.0, hard_min=2.0),
+    Metric("scatter_invocations_ratio", _scatter_invocations_ratio,
+           higher_is_better=True, rel_tol=0.0,
+           hard_min=1.0, hard_max=1.0),
 ]
 
 

@@ -24,8 +24,8 @@ def _timed(fn, *a, **kw):
 
 def _sections():
     from benchmarks import (bench_deployment, bench_fault, bench_pipeline,
-                            bench_recovery, bench_routing, bench_scheduler,
-                            bench_timeline, bench_transfer)
+                            bench_recovery, bench_routing, bench_scatter,
+                            bench_scheduler, bench_timeline, bench_transfer)
 
     def timeline():
         out, us = _timed(bench_timeline.run, "both")
@@ -77,6 +77,14 @@ def _sections():
                          f"makespan={by['management']['makespan_s']}s"
                          f"->{by['direct']['makespan_s']}s")
 
+    def scatter():
+        out, us = _timed(bench_scatter.run)
+        by = {r["mode"]: r for r in out}
+        return out, us, (f"unrolled={by['hand-unrolled']['makespan_s']}s;"
+                         f"scatter={by['scatter']['makespan_s']}s;"
+                         f"sites={by['scatter']['count_sites']};"
+                         f"invocations={by['scatter']['invocations']}")
+
     return [
         ("fig8_fig9_timeline", "bench_timeline — paper Fig.8/Fig.9 "
          "(full-HPC vs hybrid)", timeline),
@@ -93,6 +101,8 @@ def _sections():
          "from-scratch", recovery),
         ("routing_data_plane", "bench_routing — direct site-to-site "
          "routing vs the R3 two-step baseline", routing),
+        ("scatter_width", "bench_scatter — N-sample scatter vs the "
+         "hand-unrolled control", scatter),
     ]
 
 

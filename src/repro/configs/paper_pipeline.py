@@ -205,6 +205,111 @@ def build_workflow(n_chains: int = 6, rows_per_chain: int = 32,
 
 
 # ---------------------------------------------------------------------------
+# The same pipeline as a Port/Token scatter: ONE declared chain, expanded by
+# the runtime into n_samples invocations.  This is the paper's §5 workload
+# at its true width — the hand-unrolled builder above keeps every chain as
+# its own step (build time grows with width, and width is frozen into the
+# DAG); here width is one integer and the executor scatters.
+# ---------------------------------------------------------------------------
+
+def _split_stream_fn(n_samples: int, rows_per_sample: int, seq_len: int,
+                     vocab: int):
+    def fn(inputs: Dict, ctx) -> Dict:
+        from repro.data.synthetic import SyntheticCorpus, pack_documents
+        corpus = SyntheticCorpus(vocab, seed=int(inputs["seed"]))
+        it = corpus.documents(0)
+        return {"shard": [pack_documents(it, seq_len, rows_per_sample)
+                          for _ in range(n_samples)]}
+    return fn
+
+
+def _count_stream_fn(cfg: ArchConfig, train_steps: int, batch: int):
+    def fn(inputs: Dict, ctx) -> Dict:
+        i = ctx.get("tag", (0,))[0]             # scatter coordinate
+        out = _count_fn(i, cfg, train_steps, batch)(inputs, ctx)
+        return {"model": out[f"model{i}"], "stats": out[f"stats{i}"]}
+    return fn
+
+
+def _seurat_stream_fn(cfg: ArchConfig, n_clusters: int = 4):
+    def fn(inputs: Dict, ctx) -> Dict:
+        i = ctx.get("tag", (0,))[0]
+        out = _seurat_fn(i, cfg, n_clusters)(inputs, ctx)
+        return {"clusters": out[f"clusters{i}"]}
+    return fn
+
+
+def _singler_stream_fn(n_types: int = 6):
+    def fn(inputs: Dict, ctx) -> Dict:
+        i = ctx.get("tag", (0,))[0]
+        out = _singler_fn(i, n_types)(inputs, ctx)
+        return {"labels": out[f"labels{i}"]}
+    return fn
+
+
+def _aggregate_fn():
+    def fn(inputs: Dict, ctx) -> Dict:
+        labels = inputs["labels"]               # gathered: tag-ordered list
+        types = np.concatenate([l["cluster_types"] for l in labels])
+        conf = np.concatenate([l["confidence"] for l in labels])
+        return {"summary": {
+            "n_samples": len(labels),
+            "type_counts": np.bincount(types).astype(np.int64),
+            "mean_confidence": float(conf.mean())}}
+    return fn
+
+
+def build_scatter_workflow(n_samples: int = 32, rows_per_sample: int = 12,
+                           seq_len: int = 64, train_steps: int = 2,
+                           batch: int = 4, vocab: int = 256,
+                           d_model: int = 48,
+                           declare_scatter: bool = True) -> Workflow:
+    """The single-cell pipeline as a 5-step scatter/gather graph.
+
+    ``/mkfastq`` emits one ``shard`` *stream* of ``n_samples`` element
+    tokens; ``/count``, ``/seurat`` and ``/singler`` each declare
+    ``scatter`` over their stream slots (zip semantics — invocation *i*
+    sees ``shard[i]``/``model[i]``), and ``/aggregate`` gathers the whole
+    ``labels`` stream into one summary.  With ``declare_scatter=False``
+    the steps carry only the stream widths and every scatter/gather
+    declaration must come from the StreamFlow file's ``scatter:`` block —
+    the config-driven path (see ``streamflow_doc_scatter_hybrid``).
+    """
+    cfg = tiny_lm(vocab=vocab, d_model=d_model)
+    dec = (lambda *slots: tuple(slots)) if declare_scatter \
+        else (lambda *slots: ())
+    wf = Workflow("single-cell-scatter")
+    wf.add_step(Step(
+        path="/mkfastq",
+        fn=_split_stream_fn(n_samples, rows_per_sample, seq_len, vocab),
+        inputs={"seed": "seed"},
+        outputs=("shard",), streams={"shard": n_samples},
+        requirements=Requirements(cores=1, memory_gb=1)))
+    wf.add_step(Step(
+        path="/count", fn=_count_stream_fn(cfg, train_steps, batch),
+        inputs={"shard": "shard"}, outputs=("model", "stats"),
+        scatter=dec("shard"),
+        requirements=Requirements(cores=1, memory_gb=2)))
+    wf.add_step(Step(
+        path="/seurat", fn=_seurat_stream_fn(cfg),
+        inputs={"shard": "shard", "model": "model"},
+        outputs=("clusters",), scatter=dec("shard", "model"),
+        requirements=Requirements(cores=1, memory_gb=2)))
+    wf.add_step(Step(
+        path="/singler", fn=_singler_stream_fn(),
+        inputs={"clusters": "clusters"}, outputs=("labels",),
+        scatter=dec("clusters"),
+        requirements=Requirements(cores=1, memory_gb=1)))
+    wf.add_step(Step(
+        path="/aggregate", fn=_aggregate_fn(),
+        inputs={"labels": "labels"}, outputs=("summary",),
+        gather=dec("labels"),
+        requirements=Requirements(cores=1, memory_gb=1)))
+    wf.validate()
+    return wf
+
+
+# ---------------------------------------------------------------------------
 # Ready-made StreamFlow documents for the paper's two experiments
 # ---------------------------------------------------------------------------
 
@@ -270,6 +375,65 @@ def streamflow_doc_single_service(n_chains: int = 6, **wf_args) -> dict:
             }
         },
         "scheduling": {"policy": "data_locality"},
+    }
+
+
+def streamflow_doc_scatter_hybrid(n_samples: int = 32,
+                                  hpc_replicas: int = 8,
+                                  cloud_replicas: int = 8,
+                                  policy: str = "data_locality",
+                                  **wf_args) -> dict:
+    """Fig. 9 at its true width, scatter-style: ONE declared chain expanded
+    into ``n_samples`` invocations at runtime.  The ``scatter:`` block in
+    the workflow config carries the scatter/gather declarations (they
+    merge with whatever the builder declared), and the ``/count`` binding
+    lists BOTH sites as targets — each count invocation is placed
+    per-invocation by the scheduler, so one scatter spreads across the
+    HPC and cloud sites instead of pinning to either."""
+    args = {"n_samples": n_samples, **wf_args}
+    return {
+        "version": "v1.0",
+        "models": {
+            "occam": {"type": "mesh", "config": {
+                "topology": {"data": 16, "model": 16},
+                "shared_store": True,
+                "services": {"cellranger": {"replicas": hpc_replicas,
+                                            "cores": 2, "memory_gb": 8}}}},
+            "garr_cloud": {"type": "local", "config": {
+                "services": {"r_env": {"replicas": cloud_replicas,
+                                       "cores": 1, "memory_gb": 4}}}},
+        },
+        "workflows": {
+            "single-cell": {
+                "type": "python",
+                "config": {"module": "repro.configs.paper_pipeline",
+                           "builder": "build_scatter_workflow",
+                           "args": args},
+                "scatter": [
+                    {"step": "/count", "over": ["shard"]},
+                    {"step": "/seurat", "over": ["shard", "model"]},
+                    {"step": "/singler", "over": ["clusters"]},
+                    {"step": "/aggregate", "gather": ["labels"]},
+                ],
+                "bindings": [
+                    {"step": "/mkfastq",
+                     "target": {"model": "occam", "service": "cellranger"}},
+                    {"step": "/count", "targets": [
+                        {"model": "occam", "service": "cellranger"},
+                        {"model": "garr_cloud", "service": "r_env"}]},
+                    {"step": "/",
+                     "target": {"model": "garr_cloud",
+                                "service": "r_env"}},
+                ],
+            }
+        },
+        "scheduling": {"policy": policy},
+        "topology": {
+            "routing": "direct",
+            "management": {"latency_s": 0.05, "bandwidth_mbps": 200},
+            "links": [{"source": "occam", "target": "garr_cloud",
+                       "latency_s": 0.005, "bandwidth_mbps": 2000}],
+        },
     }
 
 

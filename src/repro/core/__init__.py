@@ -5,7 +5,9 @@ Workflow (DAG + POSIX step ids) x declarative multi-site environments
 locality-aware FCFS scheduler with R1-R4 semantics (atomic deployment
 units, task->service bindings, two-step baseline transfers, elision).
 """
-from repro.core.workflow import Workflow, Step, Requirements, match_binding
+from repro.core.workflow import (Workflow, Step, Requirements, Port, Token,
+                                 Invocation, InvocationPlan, match_binding,
+                                 token_ref, parse_token_ref, invocation_base)
 from repro.core.connector import (Connector, ConnectorCopyKind, ObjectStore,
                                   serialize, deserialize)
 from repro.core.connectors import (LocalConnector, MeshConnector,
@@ -15,9 +17,9 @@ from repro.core.deployment import DeploymentManager, ModelSpec
 from repro.core.scheduler import (Scheduler, Policy, DataLocalityPolicy,
                                   RoundRobinPolicy, LoadBalancePolicy,
                                   BackfillPolicy, LocalityBatchPolicy,
-                                  WidestFirstPolicy, JobDescription,
-                                  JobAllocation, ResourceAllocation,
-                                  JobStatus, POLICIES)
+                                  WidestFirstPolicy, ScatterSpreadPolicy,
+                                  JobDescription, JobAllocation,
+                                  ResourceAllocation, JobStatus, POLICIES)
 from repro.core.datamanager import DataManager, RoutePlan, TransferRecord
 from repro.core.topology import (LinkSpec, MANAGEMENT, Route,
                                  TopologyGraph)

@@ -40,9 +40,12 @@ class ResourceInfo:
 
 
 class ObjectStore:
-    """Per-resource keyed payload store with byte accounting."""
+    """Per-resource keyed payload store with byte accounting.  ``name``
+    identifies the owning resource (or site, for shared stores) so a
+    missed lookup names where the token was expected, not just its key."""
 
-    def __init__(self):
+    def __init__(self, name: str = "store"):
+        self.name = name
         self._data: Dict[str, bytes] = {}
         self._lock = threading.Lock()
         self.bytes_in = 0
@@ -55,7 +58,12 @@ class ObjectStore:
 
     def get(self, path: str) -> bytes:
         with self._lock:
-            payload = self._data[path]
+            payload = self._data.get(path)
+            if payload is None:
+                raise KeyError(
+                    f"object store {self.name!r} holds no payload at "
+                    f"{path!r} — the token was never transferred here, or "
+                    f"the site was redeployed and lost it")
             self.bytes_out += len(payload)
             return payload
 

@@ -25,14 +25,14 @@ class LocalConnector(Connector):
             time.sleep(delay)
         services = self.config.get("services", {"default": {"replicas": 1}})
         if self.config.get("shared_store"):
-            self._shared = ObjectStore()
+            self._shared = ObjectStore(f"{self.name}:shared")
         for svc, scfg in services.items():
             for i in range(int(scfg.get("replicas", 1))):
                 rname = f"{self.name}/{svc}/{i}"
                 self._resources[rname] = ResourceInfo(
                     rname, svc, cores=int(scfg.get("cores", 1)),
                     memory_gb=float(scfg.get("memory_gb", 4.0)))
-                self._stores[rname] = self._shared or ObjectStore()
+                self._stores[rname] = self._shared or ObjectStore(rname)
         self.deployed = True
 
     def undeploy(self) -> None:

@@ -49,7 +49,7 @@ class MeshConnector(Connector):
         if delay:
             time.sleep(delay)
         if self.config.get("shared_store", True):
-            self._shared = ObjectStore()
+            self._shared = ObjectStore(f"{self.name}:shared")
         services = self.config.get("services", {"default": {"replicas": 1}})
         n_dev = jax.device_count()
         # one runtime mesh per site (a pod slice IS one physical mesh);
@@ -63,7 +63,7 @@ class MeshConnector(Connector):
                 self._resources[rname] = ResourceInfo(
                     rname, svc, cores=int(scfg.get("cores", 8)),
                     memory_gb=float(scfg.get("memory_gb", 64.0)))
-                self._stores[rname] = self._shared or ObjectStore()
+                self._stores[rname] = self._shared or ObjectStore(rname)
                 self._meshes[rname] = site_mesh
         self.deployed = True
 

@@ -40,6 +40,7 @@ from typing import Any, Dict, List, Optional, Tuple
 from repro.core.connector import (Connector, ConnectorCopyKind, ObjectStore,
                                   deserialize, serialize)
 from repro.core.topology import MANAGEMENT, Route, TopologyGraph
+from repro.core.workflow import parse_token_ref
 
 
 @dataclass
@@ -51,6 +52,15 @@ class TransferRecord:
     bytes: int
     seconds: float
     route: str = ""          # planner's hop description, e.g. "hpc->cloud"
+    # scatter identity of the token: the port it belongs to and its element
+    # tag — filled from the ref, so per-port accounting (port_summary) can
+    # group a whole scatter stream's movements
+    port: str = ""
+    tag: Tuple[int, ...] = ()
+
+    def __post_init__(self):
+        if not self.port:
+            self.port, self.tag = parse_token_ref(self.token)
 
 
 @dataclass
@@ -83,7 +93,7 @@ class DataManager:
         self.topology = topology                   # TopologyGraph | None
         self._lock = threading.RLock()
         self.remote_paths: Dict[str, List[_Location]] = {}
-        self.local_store = ObjectStore()           # the management node
+        self.local_store = ObjectStore("management")  # the management node
         self.transfers: List[TransferRecord] = []
         self._transfer_workers = transfer_workers
         self._xfer_pool: Optional[ThreadPoolExecutor] = None
@@ -106,8 +116,12 @@ class DataManager:
                 return
             locs.append(loc)
         # journal outside the lock: token locations survive the driver
+        # (element tokens carry their scatter tag, so a replayed journal
+        # shows exactly which slice of a partial scatter is durable)
         if self.journal is not None:
-            self.journal.token(token, model, resource, loc.path)
+            _port, tag = parse_token_ref(token)
+            self.journal.token(token, model, resource, loc.path,
+                               tag=list(tag) or None)
 
     def locations(self, token: str) -> List[Tuple[str, str]]:
         with self._lock:
@@ -510,6 +524,27 @@ class DataManager:
                 d["n"] += 1
                 d["bytes"] += r.bytes
                 d["seconds"] += r.seconds
+        return out
+
+    def port_summary(self) -> Dict[str, Dict[str, float]]:
+        """Per-port aggregation of the transfer log: a scatter stream's
+        element movements (``shard[0]``, ``shard[1]``, ...) group under
+        their port, with the distinct element count alongside —
+        ``bench_scatter`` reads it to show that a stream's bytes stay one
+        accountable port where hand-unrolling smears them over N token
+        names."""
+        out: Dict[str, Dict[str, float]] = {}
+        tags: Dict[str, set] = {}
+        with self._lock:
+            for r in self.transfers:
+                d = out.setdefault(r.port, {"n": 0, "bytes": 0,
+                                            "seconds": 0.0, "elements": 0})
+                d["n"] += 1
+                d["bytes"] += r.bytes
+                d["seconds"] += r.seconds
+                tags.setdefault(r.port, set()).add(r.tag)
+        for port, seen in tags.items():
+            out[port]["elements"] = len(seen)
         return out
 
     def mgmt_bytes(self) -> int:

@@ -1,5 +1,15 @@
 """StreamFlow executor: the event loop driving a workflow across sites.
 
+The unit of dispatch is the **invocation**, not the declared step: the
+workflow is expanded (``Workflow.expand``) into an ``InvocationPlan``
+before execution, so a step scattered over an N-element port stream
+becomes N independently scheduled, routed and journaled invocations —
+and a binding with multiple ``targets`` lets one scatter spread its
+invocations across sites, each placement decided per invocation by the
+Scheduler.  Scalar workflows expand to themselves (same paths, same
+token refs), so everything below reads the same for the paper's flat
+DAGs.
+
 Two dispatch modes share one loop body:
 
 ``pipelined=True`` (default, beyond-paper): an event-driven pipelined
@@ -59,7 +69,8 @@ from repro.core.scheduler import (JobDescription, JobStatus, POLICIES,
                                   Scheduler)
 from repro.core.streamflow_file import Binding, StreamFlowConfig
 from repro.core.topology import TopologyGraph
-from repro.core.workflow import Step, Workflow, match_binding
+from repro.core.workflow import (InvocationPlan, Workflow,
+                                 invocation_base, match_binding)
 
 
 @dataclass
@@ -89,11 +100,13 @@ class RunResult:
                 for e in sorted(self.events, key=lambda e: e.start)]
 
 
-class _Invocation:
+class _Command:
     """The Connector 'command': reads input tokens from the resource store,
-    runs the step fn, writes outputs back.  ``tag`` keys fault injection."""
+    runs the invocation fn, writes outputs back.  ``step`` is a
+    ``workflow.Invocation`` (or a plain Step duck-typing one); ``tag``
+    keys fault injection."""
 
-    def __init__(self, step: Step, executor: "StreamFlowExecutor",
+    def __init__(self, step, executor: "StreamFlowExecutor",
                  model: str, resource: str):
         self.step = step
         self.tag = step.path
@@ -270,7 +283,11 @@ class StreamFlowExecutor:
             if not bindings:
                 raise JournalError(
                     "journal holds no bindings; pass them to resume()")
-        state.check_structure(workflow)
+        # the journal records the *expanded* per-invocation structure, so a
+        # partially-completed scatter resumes invocation by invocation —
+        # expansion is deterministic, hence paths and token refs line up
+        plan = workflow.expand()
+        state.check_structure(plan)
         # the resumed run must append to the WAL it replayed — a second
         # crash then resumes from strictly later state in the same file
         if self.journal is None or (os.path.abspath(self.journal.path)
@@ -303,11 +320,11 @@ class StreamFlowExecutor:
                 self.journal.input(token, raw)
                 if token in state.input_payloads:
                     changed.add(token)
-        tainted = self._taint_downstream(workflow, changed)
+        tainted = self._taint_downstream(plan, changed)
         state.completed_steps = {
             p for p in state.completed_steps
-            if p in workflow.steps and not (
-                tainted & set(workflow.steps[p].inputs.values()))}
+            if p in plan.steps and not (
+                tainted & set(plan.steps[p].inputs.values()))}
         # purge stale replicas of tainted tokens from still-live sites, or
         # the R4 presence check would elide transfers onto old-epoch bytes
         for token in tainted:
@@ -327,7 +344,7 @@ class StreamFlowExecutor:
         pre_completed: set = set()
         pre_tokens: set = set()
         for path in state.completed_steps:
-            step = workflow.steps.get(path)
+            step = plan.steps.get(path)
             if step is None:
                 continue
             found = {t: self._verify_token(state, t) for t in step.outputs}
@@ -357,19 +374,19 @@ class StreamFlowExecutor:
             except KeyError:
                 continue        # model no longer configured: skip the replay
 
-        return self._execute(workflow, bindings, inputs, collect,
+        return self._execute(plan, bindings, inputs, collect,
                              pre_completed=pre_completed,
                              pre_tokens=pre_tokens, resumed=True)
 
     @staticmethod
-    def _taint_downstream(workflow: Workflow, changed: set) -> set:
-        """Close a set of changed tokens over the DAG: any step consuming a
-        tainted token taints all its outputs."""
+    def _taint_downstream(plan: InvocationPlan, changed: set) -> set:
+        """Close a set of changed tokens over the DAG: any invocation
+        consuming a tainted token taints all its outputs."""
         tainted = set(changed)
         grew = bool(changed)
         while grew:
             grew = False
-            for step in workflow.steps.values():
+            for step in plan.steps.values():
                 if tainted & set(step.inputs.values()):
                     fresh = set(step.outputs) - tainted
                     if fresh:
@@ -399,16 +416,19 @@ class StreamFlowExecutor:
                 continue        # resource gone from the (re)deployed site
         return None
 
-    def _execute(self, workflow: Workflow, bindings: List[Binding],
+    def _execute(self, workflow, bindings: List[Binding],
                  inputs: Optional[Dict[str, Any]] = None,
                  collect: bool = True, *,
                  pre_completed: Optional[set] = None,
                  pre_tokens: Optional[set] = None,
                  resumed: bool = False) -> RunResult:
         t_start = time.time()
-        workflow.validate()
+        # accepts a Workflow (expanded here) or an already-expanded plan
+        # (resume passes one); scalar workflows expand to themselves —
+        # same paths, same token refs — so pre-Port callers see no change
+        plan: InvocationPlan = workflow.expand()
         inputs = inputs or {}
-        missing = set(workflow.external_inputs()) - set(inputs) \
+        missing = set(plan.external_inputs()) - set(inputs) \
             - set(pre_tokens or ())
         if missing:
             raise ValueError(f"missing workflow inputs: {sorted(missing)}")
@@ -418,10 +438,10 @@ class StreamFlowExecutor:
             # a resumed run's inputs are already durable in this WAL
             # (resume() journals only overriding values)
             self.journal.begin_run(
-                workflow, bindings,
+                plan, bindings,
                 {} if resumed else {t: serialize(v)
                                     for t, v in inputs.items()},
-                resumed=resumed)
+                resumed=resumed, scatter=plan.scatter_widths())
 
         done_tokens = set(inputs) | set(pre_tokens or ())
         completed: set = set(pre_completed or ())
@@ -436,7 +456,7 @@ class StreamFlowExecutor:
         starving_since: Optional[float] = None
         tick = 0
         try:
-            while len(completed) < len(workflow.steps):
+            while len(completed) < len(plan.steps):
                 if self.tick_hook is not None:
                     self.tick_hook(tick, set(completed))
                 tick += 1
@@ -444,10 +464,10 @@ class StreamFlowExecutor:
                     step, err = next(iter(failed_final.items()))
                     raise RuntimeError(
                         f"step {step} failed after retries") from err
-                # 1. enqueue newly fireable steps (FCFS arrival order)
+                # 1. enqueue newly fireable invocations (FCFS arrival order)
                 started = (list(running) + list(completed) + waiting
                            + [r["path"] for r in retries])
-                for path in workflow.fireable(sorted(done_tokens), started):
+                for path in plan.fireable(done_tokens, started):
                     waiting.append(path)
                     if self.journal is not None:
                         self.journal.step(path, "fireable")
@@ -465,19 +485,20 @@ class StreamFlowExecutor:
                     self._retry(r["rec"], r["path"], running)
                 # 3. schedule the queue (whole-queue batch when pipelined)
                 waiting = self._schedule_queue(
-                    workflow, bindings, waiting, running, pool)
+                    plan, bindings, waiting, running, pool)
                 # 4. straggler speculation
                 if self.fault.speculative:
-                    self._maybe_speculate(workflow, bindings, running, pool)
+                    self._maybe_speculate(plan, bindings, running, pool)
                 # 5. harvest completions (failures defer into ``retries``)
                 progressed = self._harvest(running, completed, done_tokens,
                                            failed_final, retries)
                 # 6. grace-period undeploy (beyond-paper)
                 pending = waiting + list(running) + [r["path"]
                                                     for r in retries]
-                pending_models = {
-                    self._resolve_binding(p.split("#spec")[0], bindings).model
-                    for p in pending} if pending else set()
+                pending_models = set()
+                for p in pending:
+                    b = self._resolve_binding(p.split("#spec")[0], bindings)
+                    pending_models.update(m for m, _ in b.targets)
                 released = self.deployment.maybe_undeploy_idle(pending_models)
                 for m in released:
                     self.scheduler.forget_model(m)
@@ -517,14 +538,14 @@ class StreamFlowExecutor:
             for key, rec in list(running.items()):
                 fut: Future = rec["future"]
                 del running[key]
-                self.deployment.job_finished(rec["binding"].model)
+                self.deployment.job_finished(rec["model"])
                 finished_clean = fut.done() and not fut.cancelled() \
                     and fut.exception() is None
                 self.scheduler.notify(
                     key, JobStatus.COMPLETED if finished_clean
                     else JobStatus.FAILED)
                 self._record(JobEvent(key.split("#spec")[0],
-                                      rec["binding"].model, rec["resource"],
+                                      rec["model"], rec["resource"],
                                       rec["start"], time.time(),
                                       rec["attempt"],
                                       "duplicate" if finished_clean
@@ -533,8 +554,14 @@ class StreamFlowExecutor:
 
             outputs = {}
             if collect:
-                for token in workflow.final_outputs():
-                    outputs[token] = self.data.collect_output(token)
+                # stream ports collect element-wise into a tag-ordered list;
+                # scalar ports keep the paper's flat token->value shape
+                for port, refs in plan.output_ports().items():
+                    if len(refs) == 1 and refs[0] == port:
+                        outputs[port] = self.data.collect_output(port)
+                    else:
+                        outputs[port] = [self.data.collect_output(r)
+                                         for r in refs]
             if self.journal is not None:
                 self.journal.end_run(list(outputs))
             return RunResult(outputs, list(self.events),
@@ -550,42 +577,63 @@ class StreamFlowExecutor:
             self.deployment.undeploy_all()
 
     # --------------------------------------------------------------- schedule
-    def _job_desc(self, workflow: Workflow, path: str, service: str
-                  ) -> JobDescription:
-        step = workflow.steps[path]
+    def _job_desc(self, plan, path: str, service: str) -> JobDescription:
+        step = plan.steps[path]
         deps = {}
         for token in step.inputs.values():
             deps[token] = max(self.data.token_size(token), 1)
         return JobDescription(path, step.requirements, deps, service,
-                              fanout=len(workflow.successors(path)))
+                              fanout=len(plan.successors(path)),
+                              group=invocation_base(path),
+                              tag=tuple(getattr(step, "tag", ())))
 
-    def _schedule_queue(self, workflow, bindings, waiting, running, pool):
+    def _avail_for(self, binding: Binding) -> List[str]:
+        """Resources an invocation may land on: the union over the
+        binding's targets (deploying each lazily).  One target keeps the
+        paper's behaviour; multiple targets are what lets one scatter
+        spread per-invocation across sites."""
+        pool: List[str] = []
+        for model, service in binding.targets:
+            self._ensure_deployed(model)
+            conn = self.deployment.get_connector(model)
+            if conn is None:
+                continue
+            pool.extend(conn.get_available_resources(service))
+        return pool
+
+    def _placement_of(self, binding: Binding, resource: str
+                      ) -> Tuple[str, str]:
+        """(model, service) a scheduled resource belongs to."""
+        alloc = self.scheduler.resources.get(resource)
+        if alloc is not None:
+            return alloc.model, alloc.service
+        return binding.model, binding.service
+
+    def _schedule_queue(self, plan, bindings, waiting, running, pool):
         if not waiting:
             return waiting
         descs: Dict[str, JobDescription] = {}
         avail: Dict[str, List[str]] = {}
         for p in waiting:
             b = self._resolve_binding(p, bindings)
-            self._ensure_deployed(b.model)
-            conn = self.deployment.get_connector(b.model)
-            descs[p] = self._job_desc(workflow, p, b.service)
-            avail[p] = conn.get_available_resources(b.service)
+            descs[p] = self._job_desc(plan, p, b.service)
+            avail[p] = self._avail_for(b)
         if not self.pipelined:
-            return self._schedule_serial(workflow, bindings, waiting,
+            return self._schedule_serial(plan, bindings, waiting,
                                          descs, avail, running, pool)
         placed = self.scheduler.schedule_batch(
             [descs[p] for p in waiting], avail, self.data.remote_paths)
         placed_names = set()
         for job, resource in placed:
-            self._launch(workflow, job.name,
+            self._launch(plan, job.name,
                          self._resolve_binding(job.name, bindings), resource,
                          running, pool, attempt=0, speculative=False)
             placed_names.add(job.name)
         still = [p for p in waiting if p not in placed_names]
-        self._stage_in(workflow, bindings, still, avail)
+        self._stage_in(plan, bindings, still, avail)
         return still
 
-    def _schedule_serial(self, workflow, bindings, waiting, descs, avail,
+    def _schedule_serial(self, plan, bindings, waiting, descs, avail,
                          running, pool):
         """The paper's loop: one Scheduler.schedule call per queued step."""
         order = self.scheduler.order_queue(
@@ -598,12 +646,12 @@ class StreamFlowExecutor:
             if resource is None:
                 still.append(path)
                 continue
-            self._launch(workflow, path, self._resolve_binding(path, bindings),
+            self._launch(plan, path, self._resolve_binding(path, bindings),
                          resource, running, pool, attempt=0,
                          speculative=False)
         return still
 
-    def _stage_in(self, workflow, bindings, still: List[str],
+    def _stage_in(self, plan, bindings, still: List[str],
                   avail: Dict[str, List[str]]):
         """Prefetch inputs of slot-starved steps onto their bound site so the
         cross-site hop is already paid when a worker slot frees (the
@@ -612,70 +660,85 @@ class StreamFlowExecutor:
         Candidates are ordered by the transfer planner's estimated route
         cost, most expensive first: with a bounded prefetch budget, the
         WAN hops worth prepaying beat the near-free LAN moves (which cost
-        nothing at schedule time anyway)."""
+        nothing at schedule time anyway).  Multi-target bindings stage
+        toward the target the planner scores cheapest — the same argmin a
+        cost-weighted placement would pick."""
         ranked: List[tuple] = []      # (-est_cost, queue_pos, path, tokens)
         for pos, path in enumerate(still):
             b = self._resolve_binding(path, bindings)
             if not avail.get(path):
                 continue
-            step = workflow.steps[path]
-            tokens, est = [], 0.0
-            for t in step.inputs.values():
-                if self.data.has_replica(t, b.model):
-                    continue
-                # a token whose holder died has no source until the retry
-                # machinery recomputes it — don't spam the pool with copies
-                # doomed to fail
-                if not (self.data.local_store.exists(t)
-                        or self.data.locations(t)):
-                    continue
-                tokens.append(t)
-                est += self.data.estimate_cost(t, b.model)
-            if tokens and est > 0:
-                ranked.append((-est, pos, path, b, tokens))
+            step = plan.steps[path]
+            best = None               # (est, model, tokens)
+            for model, _service in b.targets:
+                tokens, est = [], 0.0
+                for t in step.inputs.values():
+                    if self.data.has_replica(t, model):
+                        continue
+                    # a token whose holder died has no source until the
+                    # retry machinery recomputes it — don't spam the pool
+                    # with copies doomed to fail
+                    if not (self.data.local_store.exists(t)
+                            or self.data.locations(t)):
+                        continue
+                    tokens.append(t)
+                    est += self.data.estimate_cost(t, model)
+                if best is None or est < best[0]:
+                    best = (est, model, tokens)
+            if best and best[2] and best[0] > 0:
+                ranked.append((-best[0], pos, path, best[1], best[2]))
         ranked.sort(key=lambda r: r[:2])
-        for _, _, path, b, tokens in ranked[:self.prefetch_depth]:
+        for _, _, path, model, tokens in ranked[:self.prefetch_depth]:
             # the exact resource doesn't matter: once any replica is on the
             # site, the schedule-time move is an intra-model copy (LAN) or
             # an R4 elision — the WAN hop is what stage-in prepays
-            target = avail[path][0]
+            targets = [r for r in avail[path]
+                       if self._placement_of_model(r) == model]
+            if not targets:
+                continue
             for token in tokens:
-                self.data.transfer_data_async(token, b.model, target)
+                self.data.transfer_data_async(token, model, targets[0])
 
-    def _launch(self, workflow, path, binding, resource, running, pool,
+    def _placement_of_model(self, resource: str) -> Optional[str]:
+        alloc = self.scheduler.resources.get(resource)
+        return alloc.model if alloc is not None else None
+
+    def _launch(self, plan, path, binding, resource, running, pool,
                 *, attempt: int, speculative: bool):
-        step = workflow.steps[path]
+        step = plan.steps[path]
+        model, service = self._placement_of(binding, resource)
         cancel = threading.Event()
         rec = {
             "binding": binding, "resource": resource, "attempt": attempt,
+            "model": model, "service": service,
             "speculative": speculative, "cancel": cancel,
-            "start": time.time(), "workflow": workflow,
+            "start": time.time(), "workflow": plan,
         }
         key = path if not speculative else f"{path}#spec{attempt}"
         running[key] = rec
-        self.deployment.job_started(binding.model)
+        self.deployment.job_started(model)
         if self.journal is not None and not speculative:
-            self.journal.step(path, "scheduled", model=binding.model,
+            self.journal.step(path, "scheduled", model=model,
                               resource=resource, attempt=attempt)
         tokens = list(step.inputs.values())
         # pipelined: transfers start NOW, concurrent with other steps'
         # compute; the worker only joins the futures
-        xfer_futs = (self.data.prefetch(tokens, binding.model, resource)
+        xfer_futs = (self.data.prefetch(tokens, model, resource)
                      if self.pipelined else None)
 
         def work():
             if self.journal is not None and not speculative:
-                self.journal.step(path, "running", model=binding.model,
+                self.journal.step(path, "running", model=model,
                                   resource=resource, attempt=attempt)
             if xfer_futs is None:
                 for token in tokens:            # serialized baseline (R3/R4)
-                    self.data.transfer_data(token, binding.model, resource)
+                    self.data.transfer_data(token, model, resource)
             else:
                 for f in xfer_futs:
                     f.result()                  # propagate transfer failures
-            conn = self.deployment.get_connector(binding.model)
-            inv = _Invocation(step, self, binding.model, resource)
-            conn.run(resource, inv, environment={"__cancel__": cancel},
+            conn = self.deployment.get_connector(model)
+            cmd = _Command(step, self, model, resource)
+            conn.run(resource, cmd, environment={"__cancel__": cancel},
                      capture_output=False)
             return None
 
@@ -695,18 +758,18 @@ class StreamFlowExecutor:
             progressed = True
             del running[key]
             path = key.split("#spec")[0]
-            b = rec["binding"]
-            self.deployment.job_finished(b.model)
+            model, service = rec["model"], rec["service"]
+            self.deployment.job_finished(model)
             err = fut.exception()
             now = time.time()
-            wf: Workflow = rec["workflow"]
-            step = wf.steps[path]
+            plan = rec["workflow"]
+            step = plan.steps[path]
             if err is None and path in completed:
                 # lost the speculation race — record and move on
                 # (notify under the key the allocation was registered with:
                 # twins register as "path#specN", not "path")
                 self.scheduler.notify(key, JobStatus.COMPLETED)
-                self._record(JobEvent(path, b.model, rec["resource"],
+                self._record(JobEvent(path, model, rec["resource"],
                                       rec["start"], now, rec["attempt"],
                                       "duplicate", rec["speculative"]))
                 continue
@@ -714,19 +777,19 @@ class StreamFlowExecutor:
                 completed.add(path)
                 for token in step.outputs:
                     self.data.add_remote_path_mapping(
-                        b.model, rec["resource"], token)
+                        model, rec["resource"], token)
                     self.data.journal_payload(token)
                     done_tokens.add(token)
                 # WAL ordering: "completed" is written only after every
                 # output token's location (and optional payload) is durable,
                 # so a journaled-complete step always has journaled tokens
                 if self.journal is not None:
-                    self.journal.step(path, "completed", model=b.model,
+                    self.journal.step(path, "completed", model=model,
                                       resource=rec["resource"],
                                       attempt=rec["attempt"])
-                self.durations.record(b.service, now - rec["start"])
+                self.durations.record(service, now - rec["start"])
                 self.scheduler.notify(key, JobStatus.COMPLETED)
-                self._record(JobEvent(path, b.model, rec["resource"],
+                self._record(JobEvent(path, model, rec["resource"],
                                       rec["start"], now, rec["attempt"],
                                       "completed", rec["speculative"]))
                 # cancel a surviving twin
@@ -736,7 +799,7 @@ class StreamFlowExecutor:
                 continue
             # ---- failure path ------------------------------------------------
             if self.journal is not None and not rec["speculative"]:
-                self.journal.step(path, "failed", model=b.model,
+                self.journal.step(path, "failed", model=model,
                                   resource=rec["resource"],
                                   attempt=rec["attempt"],
                                   error=type(err).__name__)
@@ -746,7 +809,7 @@ class StreamFlowExecutor:
                 self.journal.scheduler_state(
                     self.scheduler.export_state(running_only=True))
             self.scheduler.notify(key, JobStatus.FAILED)
-            self._record(JobEvent(path, b.model, rec["resource"],
+            self._record(JobEvent(path, model, rec["resource"],
                                   rec["start"], now, rec["attempt"],
                                   f"failed:{type(err).__name__}",
                                   rec["speculative"]))
@@ -756,11 +819,11 @@ class StreamFlowExecutor:
                 failed_final[path] = err
                 continue
             # site health check: dead site => redeploy + forget its tokens
-            conn = self.deployment.get_connector(b.model)
+            conn = self.deployment.get_connector(model)
             if conn is None or not conn.ping(rec["resource"]):
-                self.data.drop_model(b.model)
-                self.scheduler.forget_model(b.model)
-                self.deployment.redeploy(b.model)
+                self.data.drop_model(model)
+                self.scheduler.forget_model(model)
+                self.deployment.redeploy(model)
             delay = self.fault.backoff_s * (
                 self.fault.backoff_mult ** rec["attempt"])
             # defer instead of sleeping: backoff must not block dispatch of
@@ -770,12 +833,10 @@ class StreamFlowExecutor:
         return progressed
 
     def _retry(self, rec, path, running):
-        wf: Workflow = rec["workflow"]
+        plan = rec["workflow"]
         b = rec["binding"]
-        self._ensure_deployed(b.model)
-        conn = self.deployment.get_connector(b.model)
-        avail = conn.get_available_resources(b.service)
-        job = self._job_desc(wf, path, b.service)
+        avail = self._avail_for(b)              # any target may host a retry
+        job = self._job_desc(plan, path, b.service)
         job.name = path
         resource = self.scheduler.schedule(job, avail, self.data.remote_paths)
         if resource is None and avail:
@@ -783,32 +844,30 @@ class StreamFlowExecutor:
             self.scheduler.jobs.pop(path, None)
         if resource is None:
             raise RuntimeError(f"no resource to retry {path}")
-        self._launch(wf, path, b, resource, running, self._pool,
+        self._launch(plan, path, b, resource, running, self._pool,
                      attempt=rec["attempt"] + 1, speculative=False)
 
     # ------------------------------------------------------------- speculation
-    def _maybe_speculate(self, workflow, bindings, running, pool):
+    def _maybe_speculate(self, plan, bindings, running, pool):
         for key, rec in list(running.items()):
             if rec["speculative"] or "#spec" in key:
                 continue
             path = key
             b = rec["binding"]
             elapsed = time.time() - rec["start"]
-            if not self.durations.is_straggler(b.service, elapsed,
+            if not self.durations.is_straggler(rec["service"], elapsed,
                                                self.fault):
                 continue
             if any(k.startswith(path + "#spec") for k in running):
                 continue                        # one twin at a time
-            conn = self.deployment.get_connector(b.model)
-            if conn is None:
+            avail = [r for r in self._avail_for(b) if r != rec["resource"]]
+            if not avail:
                 continue
-            avail = [r for r in conn.get_available_resources(b.service)
-                     if r != rec["resource"]]
-            job = self._job_desc(workflow, path, b.service)
+            job = self._job_desc(plan, path, b.service)
             job.name = f"{path}#spec{rec['attempt']}"
             resource = self.scheduler.schedule(job, avail,
                                                self.data.remote_paths)
             if resource is None:
                 continue
-            self._launch(workflow, path, b, resource, running, pool,
+            self._launch(plan, path, b, resource, running, pool,
                          attempt=rec["attempt"], speculative=True)

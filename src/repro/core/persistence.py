@@ -7,13 +7,18 @@ gap with a *write-ahead execution journal*: an append-only JSON-lines file
 (dependency-free, one fsync'd record per event) that captures everything
 the driver would need to pick a run back up:
 
-  run_begin    workflow structure (step graph), bindings, builder reference
-               (module/builder/args, when the workflow came from a
-               StreamFlow file) and the external input payloads;
-  step         per-step state transitions
-               (fireable -> scheduled -> running -> completed/failed);
+  run_begin    workflow structure (the *expanded* per-invocation graph,
+               plus declared-step scatter widths), bindings, builder
+               reference (module/builder/args, when the workflow came
+               from a StreamFlow file) and the external input payloads;
+  step         per-invocation state transitions
+               (fireable -> scheduled -> running -> completed/failed) —
+               a scattered step journals one state machine per element
+               ("/count@3"), which is what makes a partial scatter
+               individually recoverable;
   token        output-token registrations with their site locations
-               (model, resource, store path);
+               (model, resource, store path) and, for scatter-stream
+               elements, their tag;
   payload      optional inline copies of small output tokens, so recovery
                works even when every site died with the driver;
   transfer     start/done markers for data movements, so in-flight copies
@@ -84,8 +89,12 @@ class JournalState:
     """Aggregate view of a replayed journal."""
     workflow_name: Optional[str] = None
     journal_opts: Optional[dict] = None       # durability policy of the WAL
-    # step path -> {"inputs": {port: token}, "outputs": [token, ...]}
+    # invocation path -> {"inputs": {slot: ref}, "outputs": [ref, ...]}
     structure: Dict[str, dict] = field(default_factory=dict)
+    # declared step path -> invocation count (scattered steps only)
+    scatter_widths: Dict[str, int] = field(default_factory=dict)
+    # token ref -> scatter tag (stream elements only)
+    token_tags: Dict[str, Tuple[int, ...]] = field(default_factory=dict)
     builder: Optional[dict] = None            # {module, builder, args}
     bindings: List[Tuple[str, str, str]] = field(default_factory=list)
     input_payloads: Dict[str, bytes] = field(default_factory=dict)
@@ -121,15 +130,30 @@ class JournalState:
         if not isinstance(wf, Workflow):
             raise JournalError(
                 f"journaled builder returned {type(wf).__name__}")
+        if self.builder.get("scatter"):
+            # the run's scatter declarations came from the StreamFlow
+            # file's scatter: block, not the builder — re-apply them or
+            # the rebuilt plan would be the scalar one and check_structure
+            # would (rightly) refuse to resume
+            from repro.core.streamflow_file import _apply_scatter_block
+            _apply_scatter_block(self.workflow_name or "journaled", wf,
+                                 self.builder["scatter"])
         return wf
 
     def build_bindings(self):
         from repro.core.streamflow_file import Binding
-        return [Binding(s, m, svc) for s, m, svc in self.bindings]
+        out = []
+        for b in self.bindings:
+            step, model, service = b[0], b[1], b[2]
+            extra = tuple(tuple(t) for t in (b[3] if len(b) > 3 else ()))
+            out.append(Binding(step, model, service, extra))
+        return out
 
     def check_structure(self, workflow) -> None:
-        """The journal describes a *specific* DAG; resuming a different one
-        would silently skip the wrong steps."""
+        """The journal describes a *specific* expanded DAG; resuming a
+        different one (changed ports — or a changed scatter width, which
+        renames invocations and token refs) would silently skip the wrong
+        steps."""
         ours = {p: {"inputs": dict(s.inputs), "outputs": list(s.outputs)}
                 for p, s in workflow.steps.items()}
         if self.structure and ours != self.structure:
@@ -227,13 +251,19 @@ class ExecutionJournal:
 
     # typed helpers ---------------------------------------------------------
     def begin_run(self, workflow, bindings, input_payloads: Dict[str, bytes],
-                  *, resumed: bool = False):
+                  *, resumed: bool = False,
+                  scatter: Optional[Dict[str, int]] = None):
         structure = {p: {"inputs": dict(s.inputs),
                          "outputs": list(s.outputs)}
                      for p, s in workflow.steps.items()}
         self.append("run_begin", workflow=workflow.name, structure=structure,
                     builder=getattr(workflow, "builder_info", None),
-                    bindings=[[b.step, b.model, b.service] for b in bindings],
+                    bindings=[
+                        [b.step, b.model, b.service]
+                        + ([[list(t) for t in b.extra_targets]]
+                           if getattr(b, "extra_targets", ()) else [])
+                        for b in bindings],
+                    scatter=scatter or {},
                     resumed=resumed,
                     # persist the durability policy: a resume driven purely
                     # by the journal must keep writing at the same level
@@ -253,9 +283,14 @@ class ExecutionJournal:
     def step(self, path: str, state: str, **kw):
         self.append("step", path=path, state=state, **kw)
 
-    def token(self, token: str, model: str, resource: str, path: str):
+    def token(self, token: str, model: str, resource: str, path: str,
+              tag: Optional[List[int]] = None):
+        """``tag`` is the token's scatter coordinates (stream elements
+        only) — replayed into ``JournalState.token_tags`` so recovery
+        tooling can see which slice of a partial scatter is durable."""
+        fields = {} if not tag else {"tag": tag}
         self.append("token", token=token, model=model, resource=resource,
-                    path=path)
+                    path=path, **fields)
 
     def payload(self, token: str, raw: bytes) -> bool:
         """Inline a token's bytes if the checkpoint policy allows it."""
@@ -340,6 +375,7 @@ class ExecutionJournal:
             st.structure = rec.get("structure") or st.structure
             st.builder = rec.get("builder") or st.builder
             st.journal_opts = rec.get("journal_opts") or st.journal_opts
+            st.scatter_widths = rec.get("scatter") or st.scatter_widths
             if rec.get("bindings"):
                 st.bindings = [tuple(b) for b in rec["bindings"]]
             st.run_ended = False
@@ -358,6 +394,8 @@ class ExecutionJournal:
             loc = (rec["model"], rec["resource"], rec["path"])
             if loc not in locs:
                 locs.append(loc)
+            if rec.get("tag"):
+                st.token_tags[rec["token"]] = tuple(rec["tag"])
         elif kind == "payload":
             st.payloads[rec["token"]] = _unb64(rec["payload"])
         elif kind == "transfer":

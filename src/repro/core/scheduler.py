@@ -21,6 +21,12 @@ Three queue-aware policies ship behind the same interface: ``backfill``
 ``locality_batch`` (batch-wide greedy matching of jobs to data holders,
 largest transfers first) and ``widest_first`` (jobs unlocking the most
 successors run first, maximising downstream parallelism).
+
+Beyond-paper (flagged): scatter-aware placement.  Jobs carry their
+scatter identity (``JobDescription.group``/``tag`` — the declared step
+behind an invocation); ``scatter_spread`` balances each group's
+invocations across the models its binding targets, so one wide scatter
+fans out over every site instead of flooding the first.
 """
 from __future__ import annotations
 
@@ -41,13 +47,17 @@ class JobStatus(Enum):
 
 @dataclass
 class JobDescription:
-    name: str                                     # step path (+attempt tag)
+    name: str                                     # invocation path (+attempt)
     requirements: Requirements
     # token -> size in bytes (data dependencies, for locality reasoning)
     data_deps: Dict[str, int] = field(default_factory=dict)
     service: str = "default"
     # successor steps this job's outputs unlock (widest-first reasoning)
     fanout: int = 0
+    # scatter identity: the declared step behind this invocation and its
+    # tag — lets policies reason about a whole scatter group at once
+    group: str = ""
+    tag: Tuple[int, ...] = ()
 
 
 @dataclass
@@ -341,6 +351,45 @@ class WidestFirstPolicy(Policy):
         return sorted(queue, key=lambda j: -j.fanout)
 
 
+class ScatterSpreadPolicy(Policy):
+    """Beyond-paper scatter-aware policy: per-invocation placement that
+    balances each scatter *group* (``JobDescription.group`` — the declared
+    step behind the invocations) across models.  Candidate models are
+    tried least-occupied-by-this-group first, so a 32-wide scatter lands
+    roughly evenly on every site its binding targets instead of flooding
+    the first one; placement *within* the chosen model stays
+    data-locality (an inner :class:`DataLocalityPolicy`, cost-weighted
+    when a topology is attached)."""
+
+    def __init__(self):
+        self.inner = DataLocalityPolicy()
+
+    def get_resource(self, job, available, remote_paths, jobs, resources):
+        group = job.group or job.name
+        running: Dict[str, int] = {}            # model -> group members
+        for alloc in jobs.values():
+            if alloc.status is not JobStatus.RUNNING:
+                continue
+            if (alloc.job.group or alloc.job.name) != group:
+                continue
+            res = resources.get(alloc.resource)
+            if res is not None:
+                running[res.model] = running.get(res.model, 0) + 1
+        by_model: Dict[str, List[str]] = {}
+        for cand in available:
+            res = resources.get(cand)
+            if res is None or res.jobs or not _fits(job, res):
+                continue
+            by_model.setdefault(res.model, []).append(cand)
+        for model in sorted(by_model,
+                            key=lambda m: (running.get(m, 0), m)):
+            got = self.inner.get_resource(job, by_model[model],
+                                          remote_paths, jobs, resources)
+            if got is not None:
+                return got
+        return None
+
+
 POLICIES = {
     "data_locality": DataLocalityPolicy,
     "round_robin": RoundRobinPolicy,
@@ -348,6 +397,7 @@ POLICIES = {
     "backfill": BackfillPolicy,
     "locality_batch": LocalityBatchPolicy,
     "widest_first": WidestFirstPolicy,
+    "scatter_spread": ScatterSpreadPolicy,
 }
 
 

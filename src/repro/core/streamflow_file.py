@@ -10,8 +10,9 @@ from __future__ import annotations
 import importlib
 import json
 import os
+import re
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 import yaml
 
@@ -30,6 +31,14 @@ class Binding:
     step: str
     model: str
     service: str
+    # further (model, service) targets beyond the primary one: every target
+    # may host this step's invocations, and the scheduler decides per
+    # invocation — how one scatter spreads across sites
+    extra_targets: Tuple[Tuple[str, str], ...] = ()
+
+    @property
+    def targets(self) -> List[Tuple[str, str]]:
+        return [(self.model, self.service), *self.extra_targets]
 
 
 @dataclass
@@ -59,7 +68,8 @@ def _check(cond: bool, msg: str):
 
 def _validate_against_schema(doc: dict, schema: dict, path: str = "$"):
     """Minimal JSON-Schema subset validator (type/required/enum/properties/
-    additionalProperties/items) — enough to enforce config_schema.json."""
+    additionalProperties/items/minimum/minItems/pattern) — enough to
+    enforce config_schema.json."""
     t = schema.get("type")
     if t:
         types = t if isinstance(t, list) else [t]
@@ -74,6 +84,18 @@ def _validate_against_schema(doc: dict, schema: dict, path: str = "$"):
     if "enum" in schema:
         _check(doc in schema["enum"],
                f"{path}: {doc!r} not one of {schema['enum']}")
+    if "minimum" in schema and isinstance(doc, (int, float)) \
+            and not isinstance(doc, bool):
+        _check(doc >= schema["minimum"],
+               f"{path}: {doc} is below the minimum {schema['minimum']}")
+    if "pattern" in schema and isinstance(doc, str):
+        _check(re.search(schema["pattern"], doc) is not None,
+               f"{path}: {doc!r} does not match pattern "
+               f"{schema['pattern']!r}")
+    if isinstance(doc, list) and "minItems" in schema:
+        _check(len(doc) >= schema["minItems"],
+               f"{path}: needs at least {schema['minItems']} item(s), "
+               f"got {len(doc)}")
     if isinstance(doc, dict):
         for req in schema.get("required", []):
             _check(req in doc, f"{path}: missing required key {req!r}")
@@ -112,6 +134,43 @@ def _build_workflow(name: str, wcfg: dict) -> Workflow:
     return wf
 
 
+def _apply_scatter_block(name: str, wf: Workflow, entries: List[dict]):
+    """Apply a workflow's ``scatter:`` block: each entry marks a step's
+    input slots as scattered (``over`` — one invocation per stream
+    element) or gathered (``gather`` — fire once with the whole stream).
+    The block *augments* whatever the Python builder already declared, so
+    plain builders become scatterable from configuration alone; the
+    merged declarations are checked by re-expanding the workflow, so a
+    typo'd slot or a scatter over a scalar port fails at load time, not
+    mid-run."""
+    for i, entry in enumerate(entries):
+        step = wf.steps.get(entry["step"])
+        _check(step is not None,
+               f"workflow {name}: scatter[{i}] names unknown step "
+               f"{entry['step']!r}")
+        for key, attr in (("over", "scatter"), ("gather", "gather")):
+            slots = entry.get(key, [])
+            for slot in slots:
+                _check(slot in step.inputs,
+                       f"workflow {name}: scatter[{i}] ({step.path}): "
+                       f"no input slot {slot!r} "
+                       f"(have {sorted(step.inputs)})")
+            if slots:
+                merged = tuple(dict.fromkeys(
+                    (*getattr(step, attr), *slots)))
+                setattr(step, attr, merged)
+        _check(not set(step.scatter) & set(step.gather),
+               f"workflow {name}: scatter[{i}] ({step.path}): slots "
+               f"{sorted(set(step.scatter) & set(step.gather))} cannot "
+               f"both scatter and gather")
+    if entries:
+        try:
+            wf.expand()
+        except ValueError as e:
+            raise StreamFlowFileError(
+                f"workflow {name}: scatter block does not expand: {e}")
+
+
 def load(path_or_doc) -> StreamFlowConfig:
     """Load + validate a StreamFlow file (path, YAML string, or dict)."""
     if isinstance(path_or_doc, dict):
@@ -131,12 +190,27 @@ def load(path_or_doc) -> StreamFlowConfig:
     for name, w in doc["workflows"].items():
         bindings = []
         for b in w["bindings"]:
-            tgt = b["target"]
-            _check(tgt["model"] in models,
-                   f"binding {b['step']}: unknown model {tgt['model']!r}")
-            bindings.append(Binding(b["step"], tgt["model"], tgt["service"]))
-        workflows[name] = WorkflowEntry(
-            name, _build_workflow(name, w["config"]), bindings)
+            _check("target" in b or "targets" in b,
+                   f"binding {b['step']}: needs a target (or targets)")
+            _check(not ("target" in b and "targets" in b),
+                   f"binding {b['step']}: give target OR targets, "
+                   f"not both (ambiguous)")
+            tgts = b.get("targets") or [b["target"]]
+            for tgt in tgts:
+                _check(tgt["model"] in models,
+                       f"binding {b['step']}: unknown model {tgt['model']!r}")
+            bindings.append(Binding(
+                b["step"], tgts[0]["model"], tgts[0]["service"],
+                tuple((t["model"], t["service"]) for t in tgts[1:])))
+        wf = _build_workflow(name, w["config"])
+        _apply_scatter_block(name, wf, w.get("scatter", []))
+        if w.get("scatter"):
+            # the journaled builder reference must reproduce the *scattered*
+            # workflow, or a journal-only resume would rebuild the scalar
+            # plan and fail the structure check — record the block so
+            # JournalState.build_workflow re-applies it
+            wf.builder_info["scatter"] = w["scatter"]
+        workflows[name] = WorkflowEntry(name, wf, bindings)
 
     ckpt = doc.get("checkpoint", {})
     if ckpt.get("enabled", True) and "journal_path" in ckpt:

@@ -83,6 +83,11 @@ class TopologyGraph:
     paper's two-step copy (the R3 control), whatever links are declared.
     """
 
+    #: route() memo entries kept before the cache resets (a wide scatter
+    #: asks for the same few (source, target, size) routes thousands of
+    #: times — once per element token per placement candidate)
+    ROUTE_CACHE_MAX = 4096
+
     def __init__(self, routing: str = "direct"):
         if routing not in ("direct", "management"):
             raise ValueError(f"unknown routing mode {routing!r}; "
@@ -91,6 +96,8 @@ class TopologyGraph:
         # (source, target) -> LinkSpec; management star edges included
         self._links: Dict[Tuple[str, str], LinkSpec] = {}
         self._sites: List[str] = []
+        # (source, target, n_bytes) -> Route; invalidated on graph edits
+        self._route_cache: Dict[Tuple[str, str, int], Route] = {}
 
     # -- construction ---------------------------------------------------------
     def add_site(self, name: str, *, mgmt_latency_s: float = 0.0,
@@ -101,6 +108,7 @@ class TopologyGraph:
         for a, b in ((name, MANAGEMENT), (MANAGEMENT, name)):
             self._links[(a, b)] = LinkSpec(a, b, mgmt_latency_s,
                                            mgmt_bandwidth_mbps)
+        self._route_cache.clear()
 
     def add_link(self, source: str, target: str, *, latency_s: float = 0.0,
                  bandwidth_mbps: float = 0.0, symmetric: bool = True):
@@ -115,6 +123,7 @@ class TopologyGraph:
             self._links[(target, source)] = LinkSpec(target, source,
                                                      latency_s,
                                                      bandwidth_mbps)
+        self._route_cache.clear()
 
     @classmethod
     def from_config(cls, models: Dict[str, object],
@@ -181,22 +190,36 @@ class TopologyGraph:
         declared link (one hop) and the two-step management relay (always
         available).  Same-site movement is free — the sibling-LAN hop.
         With ``routing="management"`` only the relay is considered.
+
+        Memoised on (source, target, n_bytes): a scatter's element tokens
+        share a handful of sizes, so the planner's per-token, per-candidate
+        queries collapse to dictionary hits.  Callers must treat the
+        returned Route as immutable.
         """
+        key = (source, target, n_bytes)
+        hit = self._route_cache.get(key)
+        if hit is not None:
+            return hit
         if source == target:
-            return Route([], 0.0)
-        if source == MANAGEMENT:
+            route = Route([], 0.0)
+        elif source == MANAGEMENT:
             down = self.mgmt_link(target, outbound=False)
-            return Route([down], down.cost(n_bytes))
-        if target == MANAGEMENT:
+            route = Route([down], down.cost(n_bytes))
+        elif target == MANAGEMENT:
             up = self.mgmt_link(source, outbound=True)
-            return Route([up], up.cost(n_bytes))
-        two_step = self.two_step_route(source, target, n_bytes)
-        if self.routing == "management":
-            return two_step
-        direct = self._links.get((source, target))
-        if direct is not None and direct.cost(n_bytes) <= two_step.cost:
-            return Route([direct], direct.cost(n_bytes))
-        return two_step
+            route = Route([up], up.cost(n_bytes))
+        else:
+            two_step = self.two_step_route(source, target, n_bytes)
+            route = two_step
+            if self.routing != "management":
+                direct = self._links.get((source, target))
+                if direct is not None \
+                        and direct.cost(n_bytes) <= two_step.cost:
+                    route = Route([direct], direct.cost(n_bytes))
+        if len(self._route_cache) >= self.ROUTE_CACHE_MAX:
+            self._route_cache.clear()
+        self._route_cache[key] = route
+        return route
 
     def cost(self, source: str, target: str, n_bytes: int) -> float:
         return self.route(source, target, n_bytes).cost

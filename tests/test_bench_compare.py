@@ -13,7 +13,9 @@ from benchmarks import compare  # noqa: E402
 def _bench(*, serial=1.0, piped=0.5, scratch=3.0, resumed=1.0,
            scratch_steps=13, resumed_steps=10,
            mgmt_direct=100, mgmt_baseline=100_000, mk_direct=0.7,
-           mk_mgmt=1.0, direct_n=8):
+           mk_mgmt=1.0, direct_n=8,
+           mk_unrolled=2.4, mk_scatter=2.3, scatter_sites=2,
+           scatter_planned=50, scatter_done=50):
     return {"results": {
         "pipeline_makespan": [
             {"topology": "fig9", "mode": "serialized-fcfs",
@@ -33,6 +35,13 @@ def _bench(*, serial=1.0, piped=0.5, scratch=3.0, resumed=1.0,
             {"mode": "direct", "makespan_s": mk_direct,
              "mgmt_bytes": mgmt_direct, "direct_n": direct_n},
         ],
+        "scatter_width": [
+            {"mode": "hand-unrolled", "makespan_s": mk_unrolled,
+             "count_sites": 1, "planned": 49, "invocations": 49},
+            {"mode": "scatter", "makespan_s": mk_scatter,
+             "count_sites": scatter_sites, "planned": scatter_planned,
+             "invocations": scatter_done},
+        ],
     }}
 
 
@@ -44,6 +53,9 @@ def test_extract_metrics():
     assert m["routing_makespan_ratio"] == pytest.approx(0.7)
     assert m["routing_mgmt_bytes_ratio"] == pytest.approx(0.001)
     assert m["routing_direct_transfers"] == 8.0
+    assert m["scatter_makespan_ratio"] == pytest.approx(2.3 / 2.4)
+    assert m["scatter_count_sites"] == 2.0
+    assert m["scatter_invocations_ratio"] == pytest.approx(1.0)
 
 
 def _run(tmp_path, bench, baseline_bench=None, argv_extra=()):
@@ -86,6 +98,23 @@ def test_gate_tolerates_noise_within_rel_tol(tmp_path):
 def test_gate_fails_when_resume_recomputes_everything(tmp_path, capsys):
     assert _run(tmp_path, _bench(resumed_steps=13)) == 1
     assert "recovery_steps_ratio" in capsys.readouterr().out
+
+
+def test_gate_fails_when_scatter_stops_spreading(tmp_path, capsys):
+    assert _run(tmp_path, _bench(scatter_sites=1)) == 1
+    out = capsys.readouterr().out
+    assert "scatter_count_sites" in out and "hard bound" in out
+
+
+def test_gate_fails_when_scatter_loses_invocations(tmp_path, capsys):
+    assert _run(tmp_path, _bench(scatter_done=49)) == 1
+    assert "scatter_invocations_ratio" in capsys.readouterr().out
+
+
+def test_gate_fails_when_scatter_costs_makespan(tmp_path, capsys):
+    # well past the 1.25x hard ceiling: the expression itself got slow
+    assert _run(tmp_path, _bench(mk_scatter=3.2)) == 1
+    assert "scatter_makespan_ratio" in capsys.readouterr().out
 
 
 def test_gate_fails_on_missing_benchmark_section(tmp_path, capsys):

@@ -64,3 +64,70 @@ def test_match_binding_deepest_wins():
     assert match_binding("/chains/5/count", paths) == "/chains"
     assert match_binding("/mkfastq", paths) == "/"
     assert match_binding("/x", ["/y"]) is None
+
+
+def test_match_binding_root_binding_catches_everything():
+    assert match_binding("/a", ["/"]) == "/"
+    assert match_binding("/a/b/c", ["/"]) == "/"
+    # the root itself as a step path
+    assert match_binding("/", ["/"]) == "/"
+
+
+def test_match_binding_trailing_slashes_normalise():
+    # a trailing slash on a binding must not change what it matches
+    assert match_binding("/chains/2", ["/chains/"]) == "/chains"
+    assert match_binding("/chains", ["/chains/"]) == "/chains"
+    # nor produce a deeper-looking path that outranks the clean entry
+    assert match_binding("/chains/2", ["/chains/", "/chains"]) == "/chains"
+
+
+def test_match_binding_overlapping_prefixes_do_not_match():
+    # "/chain" is a *string* prefix of "/chains" but not a path prefix
+    assert match_binding("/chains/2", ["/chain"]) is None
+    assert match_binding("/chains", ["/chain", "/chains"]) == "/chains"
+    assert match_binding("/chainsaw/x", ["/chains"]) is None
+
+
+def test_match_binding_resolves_invocations_through_their_step():
+    paths = ["/", "/chains", "/chains/count"]
+    assert match_binding("/chains/count@3", paths) == "/chains/count"
+    assert match_binding("/chains/count@1.2", paths) == "/chains/count"
+    assert match_binding("/other@0", paths) == "/"
+
+
+def test_diamond_external_inputs_and_final_outputs():
+    # diamond where the source consumes an external token and one middle
+    # step taps a second external token; t1 is multi-consumed, t4 is the
+    # only unconsumed product
+    wf = Workflow("d2")
+    wf.add_step(_step("/a", {"seed": "seed"}, ["t1"]))
+    wf.add_step(_step("/b", {"x": "t1", "cfg": "config"}, ["t2"]))
+    wf.add_step(_step("/c", {"x": "t1"}, ["t3"]))
+    wf.add_step(_step("/d", {"l": "t2", "r": "t3"}, ["t4"]))
+    wf.validate()
+    assert wf.external_inputs() == ["config", "seed"]
+    assert wf.final_outputs() == ["t4"]
+    # the expanded plan agrees (scalar expansion is identity-shaped)
+    plan = wf.expand()
+    assert plan.external_inputs() == ["config", "seed"]
+    assert plan.final_outputs() == ["t4"]
+
+
+def test_validate_handles_graphs_past_the_recursion_limit():
+    import sys
+    depth = sys.getrecursionlimit() + 200
+    wf = Workflow("deep")
+    wf.add_step(_step("/s0", {}, ["t0"]))
+    for i in range(1, depth):
+        wf.add_step(_step(f"/s{i}", {"x": f"t{i - 1}"}, [f"t{i}"]))
+    wf.validate()                      # recursive DFS would RecursionError
+    assert wf.final_outputs() == [f"t{depth - 1}"]
+
+
+def test_validate_reports_cycles_in_deep_graphs():
+    wf = Workflow("cyc")
+    wf.add_step(_step("/s0", {"x": "t99"}, ["t0"]))
+    for i in range(1, 100):
+        wf.add_step(_step(f"/s{i}", {"x": f"t{i - 1}"}, [f"t{i}"]))
+    with pytest.raises(ValueError, match="cycle"):
+        wf.validate()
