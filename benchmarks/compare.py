@@ -120,6 +120,24 @@ def _scatter_invocations_ratio(results: dict) -> float:
             / max(by["scatter"]["planned"], 1))
 
 
+def _service_throughput_ratio(results: dict) -> float:
+    """Pooled over per-run service throughput under the same bursty
+    arrivals — the PR-6 claim that the deployment pool amortizes site
+    bring-up across runs.  Higher is better."""
+    by = _rows_by(results, "service_multitenant", "variant")
+    return (by["pooled"]["throughput_rps"]
+            / max(by["per-run"]["throughput_rps"], 1e-9))
+
+
+def _service_p99_ratio(results: dict) -> float:
+    """Pooled over per-run steady-state p99 run latency — with a warm
+    pool a run never waits on site bring-up, so its tail must sit far
+    below the per-run control's.  Lower is better."""
+    by = _rows_by(results, "service_multitenant", "variant")
+    return (by["pooled"]["lat_p99_s"]
+            / max(by["per-run"]["lat_p99_s"], 1e-9))
+
+
 @dataclass
 class Metric:
     name: str
@@ -178,6 +196,16 @@ METRICS = [
     Metric("scatter_invocations_ratio", _scatter_invocations_ratio,
            higher_is_better=True, rel_tol=0.0,
            hard_min=1.0, hard_max=1.0),
+    # wall-ratio between the two service variants in one process; the
+    # hard bound is the claim (pooling must not LOSE throughput)
+    Metric("service_throughput_ratio", _service_throughput_ratio,
+           higher_is_better=True, rel_tol=0.30, hard_min=1.05),
+    # steady-state tail latency: the pooled p99 swings with scheduler
+    # timing (it is tiny in absolute terms), so the tolerance is wide —
+    # the hard bound pins the claim (pooled tail at most half the
+    # per-run control's)
+    Metric("service_p99_ratio", _service_p99_ratio,
+           higher_is_better=False, rel_tol=4.0, hard_max=0.5),
 ]
 
 

@@ -25,7 +25,8 @@ def _timed(fn, *a, **kw):
 def _sections():
     from benchmarks import (bench_deployment, bench_fault, bench_pipeline,
                             bench_recovery, bench_routing, bench_scatter,
-                            bench_scheduler, bench_timeline, bench_transfer)
+                            bench_scheduler, bench_service, bench_timeline,
+                            bench_transfer)
 
     def timeline():
         out, us = _timed(bench_timeline.run, "both")
@@ -77,6 +78,16 @@ def _sections():
                          f"makespan={by['management']['makespan_s']}s"
                          f"->{by['direct']['makespan_s']}s")
 
+    def service():
+        out, us = _timed(bench_service.run)
+        by = {r["variant"]: r for r in out}
+        return out, us, (f"throughput={by['per-run']['throughput_rps']}"
+                         f"->{by['pooled']['throughput_rps']}rps;"
+                         f"p99={by['per-run']['lat_p99_s']}s"
+                         f"->{by['pooled']['lat_p99_s']}s;"
+                         f"deploys={by['per-run']['deploys']}"
+                         f"->{by['pooled']['deploys']}")
+
     def scatter():
         out, us = _timed(bench_scatter.run)
         by = {r["mode"]: r for r in out}
@@ -103,6 +114,8 @@ def _sections():
          "routing vs the R3 two-step baseline", routing),
         ("scatter_width", "bench_scatter — N-sample scatter vs the "
          "hand-unrolled control", scatter),
+        ("service_multitenant", "bench_service — pooled vs per-run "
+         "deployments under bursty multi-tenant load", service),
     ]
 
 

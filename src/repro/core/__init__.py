@@ -30,5 +30,16 @@ from repro.core.executor import StreamFlowExecutor, RunResult, JobEvent
 from repro.core.fault import FaultConfig, DurationTracker
 from repro.core.persistence import (CheckpointConfig, ExecutionJournal,
                                     JournalError, JournalState)
+from repro.core.events import (EventSink, EventStream, RunCancelled,
+                               WorkflowEvent, WorkflowStarted,
+                               InvocationStateChanged, TokenAvailable,
+                               TransferRouted, WorkflowCompleted,
+                               WorkflowFailed, WorkflowCancelled,
+                               TERMINAL_EVENTS)
+from repro.core.service import (WorkflowService, ServiceConfig, TenantPolicy,
+                                DeploymentPool, PooledDeploymentManager,
+                                Run, RunInfo, ServiceError, UnknownRunError,
+                                QUEUED, RUNNING, COMPLETE, EXECUTOR_ERROR,
+                                CANCELED, TERMINAL_STATES)
 from repro.core.connectors import (start_external_site, get_external_site,
                                    stop_external_site)

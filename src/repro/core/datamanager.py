@@ -86,11 +86,17 @@ class RoutePlan:
 class DataManager:
     def __init__(self, deployment_manager, scheduler=None, *,
                  transfer_workers: int = 8, journal=None,
-                 topology: Optional[TopologyGraph] = None):
+                 topology: Optional[TopologyGraph] = None,
+                 key_prefix: str = ""):
         self.deployment_manager = deployment_manager
         self.scheduler = scheduler
         self.journal = journal                     # ExecutionJournal | None
         self.topology = topology                   # TopologyGraph | None
+        # remote store keys get this per-run prefix so concurrent runs on
+        # shared (pooled) sites can't collide — or falsely R4-elide — on
+        # identical token refs; the per-run management store stays raw
+        self.key_prefix = key_prefix
+        self.event_sink = None                     # EventSink while streaming
         self._lock = threading.RLock()
         self.remote_paths: Dict[str, List[_Location]] = {}
         self.local_store = ObjectStore("management")  # the management node
@@ -105,12 +111,16 @@ class DataManager:
         # lands after its site died can't register a stale replica
         self._model_epoch: Dict[str, int] = {}
 
+    def _rkey(self, token: str) -> str:
+        """Remote-store key for a token (namespaced per run)."""
+        return self.key_prefix + token
+
     # -- registry ---------------------------------------------------------------
     def add_remote_path_mapping(self, model: str, resource: str,
                                 token: str, path: Optional[str] = None):
         with self._lock:
             locs = self.remote_paths.setdefault(token, [])
-            loc = _Location(model, resource, path or token)
+            loc = _Location(model, resource, path or self._rkey(token))
             if any(l.resource == resource and l.path == loc.path
                    for l in locs):
                 return
@@ -214,7 +224,7 @@ class DataManager:
         live = self._live_replicas(token)
 
         # R4: already present at the destination store?
-        present = dst_store.exists(token) or any(
+        present = dst_store.exists(self._rkey(token)) or any(
             l.model == dst_model and l.resource == dst_resource
             for l in live)
         if present:
@@ -300,7 +310,7 @@ class DataManager:
 
         if plan.kind in ("elided", "staging"):
             # staging copy only (negligible vs a remote transfer — paper §4.6)
-            size = max(dst_store.size(token), 0)
+            size = max(dst_store.size(self._rkey(token)), 0)
             rec = TransferRecord(token, plan.kind, None, dst_tag, size,
                                  time.time() - t0)
             # no-op transfers have nothing to replay: keep the (fsync'd)
@@ -328,14 +338,15 @@ class DataManager:
             return self.transfer_data(token, dst_model, dst_resource)
         if plan.kind == "mgmt-push":
             # one hop: the management node already holds the payload
-            n = dst_conn.copy(token, token, ConnectorCopyKind.LOCAL_TO_REMOTE,
+            n = dst_conn.copy(token, self._rkey(token),
+                              ConnectorCopyKind.LOCAL_TO_REMOTE,
                               local_store=self.local_store,
                               dest_remote=dst_resource)
             rec = TransferRecord(token, "two-step", "management", dst_tag,
                                  n, time.time() - t0, plan.describe())
         elif plan.kind == "intra-model":
             # the connector's own (optimised) channel — the sibling-LAN hop
-            n = dst_conn.copy(src.path, token,
+            n = dst_conn.copy(src.path, self._rkey(token),
                               ConnectorCopyKind.REMOTE_TO_REMOTE,
                               source_remote=src.resource,
                               dest_remote=dst_resource)
@@ -345,7 +356,7 @@ class DataManager:
         elif plan.kind == "direct":
             # topology-routed: site to site over the declared link, never
             # touching the management node
-            n = src_conn.copy(src.path, token,
+            n = src_conn.copy(src.path, self._rkey(token),
                               ConnectorCopyKind.REMOTE_TO_REMOTE,
                               source_remote=src.resource,
                               dest_remote=dst_resource, peer=dst_conn,
@@ -359,7 +370,7 @@ class DataManager:
                                ConnectorCopyKind.REMOTE_TO_LOCAL,
                                source_remote=src.resource,
                                local_store=self.local_store)
-            n2 = dst_conn.copy(token, token,
+            n2 = dst_conn.copy(token, self._rkey(token),
                                ConnectorCopyKind.LOCAL_TO_REMOTE,
                                local_store=self.local_store,
                                dest_remote=dst_resource)
@@ -373,8 +384,16 @@ class DataManager:
               token: str, epoch: int, journaled: bool = True):
         with self._lock:
             self.transfers.append(rec)
-            if epoch != self._model_epoch.get(model, 0):
-                return          # site dropped mid-flight: don't register a
+            stale = epoch != self._model_epoch.get(model, 0)
+        sink = self.event_sink
+        if sink is not None:
+            from repro.core.events import TransferRouted
+            sink.emit(TransferRouted(token=rec.token, kind=rec.kind,
+                                     route=rec.route, src=rec.src,
+                                     dst=rec.dst, bytes=rec.bytes,
+                                     seconds=rec.seconds))
+        if stale:
+            return              # site dropped mid-flight: don't register a
                                 # replica the redeployed store doesn't hold
         self.add_remote_path_mapping(model, resource, token)
         if journaled and self.journal is not None:

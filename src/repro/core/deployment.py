@@ -35,6 +35,10 @@ class _Deployment:
     deployed_at: float
     active_jobs: int = 0
     last_used: float = 0.0
+    # refcount held by long-lived users (one per concurrent run through the
+    # service's deployment pool): a leased site is never idle-undeployed,
+    # no matter how long since its last job
+    leases: int = 0
     events: List[tuple] = field(default_factory=list)  # (event, t)
 
 
@@ -93,18 +97,46 @@ class DeploymentManager:
         with self._lock:
             return model_name in self.deployments_map
 
+    # -- lease layer (deployment pooling across concurrent runs) ----------------
+    def lease(self, model_name: str) -> Connector:
+        """Deploy-if-needed AND take a refcount, atomically: between a
+        caller's ``deploy``/``is_deployed`` and its first ``job_started``
+        there is otherwise a window where ``maybe_undeploy_idle`` can tear
+        the site down under it.  A leased model survives idle eviction
+        until every lease is released."""
+        with self._lock:
+            conn = self.deploy(model_name)
+            self.deployments_map[model_name].leases += 1
+            return conn
+
+    def release(self, model_name: str):
+        with self._lock:
+            dep = self.deployments_map.get(model_name)
+            if dep is not None:
+                dep.leases = max(0, dep.leases - 1)
+                dep.last_used = time.time()
+
+    def lease_count(self, model_name: str) -> int:
+        with self._lock:
+            dep = self.deployments_map.get(model_name)
+            return dep.leases if dep is not None else 0
+
     def undeploy(self, model_name: str):
         with self._lock:
             dep = self.deployments_map.pop(model_name, None)
         if dep is not None:
-            t0 = time.time()
-            spec = self._specs.get(model_name)
-            if spec is None or not spec.external:
-                dep.connector.undeploy()
-                self._journal(model_name, "undeploy")
-            else:
-                self._journal(model_name, "detach")
-            self.timeline.append((model_name, "undeploy", t0, time.time()))
+            self._teardown(model_name, dep)
+
+    def _teardown(self, model_name: str, dep: _Deployment):
+        """Physical teardown of a deployment already popped from the map."""
+        t0 = time.time()
+        spec = self._specs.get(model_name)
+        if spec is None or not spec.external:
+            dep.connector.undeploy()
+            self._journal(model_name, "undeploy")
+        else:
+            self._journal(model_name, "detach")
+        self.timeline.append((model_name, "undeploy", t0, time.time()))
 
     def undeploy_all(self):
         """End-of-workflow / on-exception cleanup (paper's conservative
@@ -118,6 +150,12 @@ class DeploymentManager:
     def job_started(self, model_name: str):
         with self._lock:
             dep = self.deployments_map.get(model_name)
+            if dep is None and model_name in self._specs:
+                # the scheduled-but-evicted race (idle undeploy won between
+                # the caller's deploy() and this job_started): revive the
+                # site under the same lock rather than run on a dead one
+                self.deploy(model_name)
+                dep = self.deployments_map.get(model_name)
             if dep:
                 dep.active_jobs += 1
                 dep.last_used = time.time()
@@ -131,24 +169,40 @@ class DeploymentManager:
 
     def maybe_undeploy_idle(self, pending_models: Optional[set] = None):
         """Beyond-paper: release sites idle longer than the grace period,
-        unless queued work still needs them."""
+        unless queued work still needs them (or a lease pins them).
+
+        Selection AND removal happen under one lock hold — the old
+        check-then-undeploy split left a window where a concurrent run
+        could ``deploy``/``is_deployed`` a model and have it torn down
+        before its ``job_started`` landed.  Physical teardown still
+        happens outside the lock (it can be slow), on deployments already
+        invisible to every other caller."""
         if self.grace_period_s is None:
             return []
-        released = []
         now = time.time()
+        popped = []
         with self._lock:
             idle = [n for n, d in self.deployments_map.items()
-                    if d.active_jobs == 0
+                    if d.active_jobs == 0 and d.leases == 0
                     and now - d.last_used >= self.grace_period_s
                     and (pending_models is None or n not in pending_models)]
-        for n in idle:
-            self.undeploy(n)
-            released.append(n)
-        return released
+            for n in idle:
+                popped.append((n, self.deployments_map.pop(n)))
+        for n, dep in popped:
+            self._teardown(n, dep)
+        return [n for n, _ in popped]
 
     # -- health ------------------------------------------------------------------
     def redeploy(self, model_name: str) -> Connector:
         """Fault path: drop and re-create a failed site (R1 makes this clean —
-        the unit redeploys atomically; the registry replays lost tokens)."""
-        self.undeploy(model_name)
-        return self.deploy(model_name)
+        the unit redeploys atomically; the registry replays lost tokens).
+        Atomic under the lock, and lease counts survive: concurrent runs
+        holding the dead site keep their idle-eviction protection on the
+        fresh one."""
+        with self._lock:
+            prev = self.deployments_map.get(model_name)
+            leases = prev.leases if prev is not None else 0
+            self.undeploy(model_name)
+            conn = self.deploy(model_name)
+            self.deployments_map[model_name].leases = leases
+            return conn

@@ -62,6 +62,11 @@ from typing import Any, Callable, Dict, List, Optional, Tuple
 from repro.core.connector import deserialize, serialize
 from repro.core.datamanager import DataManager
 from repro.core.deployment import DeploymentManager, ModelSpec
+from repro.core.events import (EventStream, InvocationStateChanged,
+                               RunCancelled, TokenAvailable,
+                               WorkflowCancelled, WorkflowCompleted,
+                               WorkflowEvent, WorkflowFailed,
+                               WorkflowStarted)
 from repro.core.fault import DurationTracker, FaultConfig
 from repro.core.persistence import (CheckpointConfig, ExecutionJournal,
                                     JournalError, JournalState)
@@ -70,7 +75,8 @@ from repro.core.scheduler import (JobDescription, JobStatus, POLICIES,
 from repro.core.streamflow_file import Binding, StreamFlowConfig
 from repro.core.topology import TopologyGraph
 from repro.core.workflow import (InvocationPlan, Workflow,
-                                 invocation_base, match_binding)
+                                 invocation_base, match_binding,
+                                 parse_token_ref)
 
 
 @dataclass
@@ -83,6 +89,9 @@ class JobEvent:
     attempt: int
     status: str
     speculative: bool = False
+    # recording order (assigned by _record): the stable tiebreak for
+    # timeline_rows — equal-start events otherwise sort non-deterministically
+    seq: int = -1
 
 
 @dataclass
@@ -97,7 +106,7 @@ class RunResult:
         t0 = min((e.start for e in self.events), default=0.0)
         return [(e.step, e.resource, round(e.start - t0, 4),
                  round(e.end - t0, 4), e.status, e.attempt, e.speculative)
-                for e in sorted(self.events, key=lambda e: e.start)]
+                for e in sorted(self.events, key=lambda e: (e.start, e.seq))]
 
 
 class _Command:
@@ -116,7 +125,11 @@ class _Command:
 
     def __call__(self, ctx) -> Dict[str, Any]:
         store = ctx["connector"].store(self._resource)
-        inputs = {port: deserialize(store.get(token))
+        # store keys carry the executor's namespace so concurrent runs
+        # sharing a pooled site can't collide (or falsely R4-elide) on
+        # identical token refs
+        key = self._ex._store_key
+        inputs = {port: deserialize(store.get(key(token)))
                   for port, token in self.step.inputs.items()}
         cancel = ctx["environment"].get("__cancel__")
         if cancel is not None and cancel.is_set():
@@ -127,7 +140,7 @@ class _Command:
             raise RuntimeError(
                 f"{self.step.path} did not produce tokens {sorted(missing)}")
         for token in self.step.outputs:
-            store.put(token, serialize(outputs[token]))
+            store.put(key(token), serialize(outputs[token]))
         return outputs
 
 
@@ -142,7 +155,16 @@ class StreamFlowExecutor:
                  prefetch_depth: int = 8,
                  deadlock_timeout_s: float = 2.0,
                  checkpoint=None,
-                 topology=None):
+                 topology=None,
+                 deployment=None,
+                 scheduler=None,
+                 namespace: str = ""):
+        # deployment/scheduler: inject shared (service-owned) managers —
+        # ``deployment`` may be a pooled lease façade; a shared
+        # ``scheduler`` gives this run a true view of site occupancy
+        # across concurrent runs.  ``namespace`` prefixes this run's
+        # remote store keys and scheduler job names so concurrent runs on
+        # shared sites can't collide.
         # checkpoint: CheckpointConfig | dict | journal-path str | None
         if isinstance(checkpoint, str):
             checkpoint = CheckpointConfig(journal_path=checkpoint)
@@ -154,7 +176,7 @@ class StreamFlowExecutor:
             topology = (TopologyGraph.from_config(models, topology)
                         if topology else None)
         self.topology = topology
-        if topology is not None:
+        if topology is not None and deployment is None:
             # the planner and the physical simulation must agree: push the
             # graph's management star costs down into each model's config,
             # where Connector.copy pays them on management-relay hops.
@@ -170,19 +192,29 @@ class StreamFlowExecutor:
                     spec.config.setdefault("link_latency_s", mgmt.latency_s)
                     spec.config.setdefault("link_bandwidth_mbps",
                                            mgmt.bandwidth_mbps)
-        self.deployment = DeploymentManager(models,
-                                            grace_period_s=grace_period_s,
-                                            journal=self.journal)
-        # cost-weighted placement is a *direct*-mode feature: with
-        # routing="management" the scheduler keeps the paper's binary
-        # holder-match (the measured control stays the paper's control)
-        self.scheduler = Scheduler(
-            POLICIES[policy](),
-            topology=(topology if topology is not None
-                      and topology.routing == "direct" else None))
+        if deployment is not None:
+            self.deployment = deployment
+            if getattr(deployment, "journal", None) is None:
+                deployment.journal = self.journal
+        else:
+            self.deployment = DeploymentManager(
+                models, grace_period_s=grace_period_s, journal=self.journal)
+        self._shared_scheduler = scheduler is not None
+        if scheduler is not None:
+            self.scheduler = scheduler
+        else:
+            # cost-weighted placement is a *direct*-mode feature: with
+            # routing="management" the scheduler keeps the paper's binary
+            # holder-match (the measured control stays the paper's control)
+            self.scheduler = Scheduler(
+                POLICIES[policy](),
+                topology=(topology if topology is not None
+                          and topology.routing == "direct" else None))
+        self._ns = namespace
         self.data = DataManager(self.deployment, self.scheduler,
                                 transfer_workers=transfer_workers,
-                                journal=self.journal, topology=topology)
+                                journal=self.journal, topology=topology,
+                                key_prefix=namespace)
         self.fault = fault or FaultConfig()
         self.durations = DurationTracker()
         self.max_workers = max_workers
@@ -191,7 +223,10 @@ class StreamFlowExecutor:
         self.deadlock_timeout_s = deadlock_timeout_s
         self.events: List[JobEvent] = []
         self._ev_lock = threading.Lock()
+        self._ev_seq = 0
         self._wake = threading.Event()
+        self._sink = None                  # EventSink while streaming
+        self._cancel_requested = threading.Event()
         # test/ops hook: called as tick_hook(tick_index, completed_paths) at
         # the top of every loop iteration — crash-injection raises from here
         self.tick_hook: Optional[Callable[[int, set], None]] = None
@@ -232,13 +267,83 @@ class StreamFlowExecutor:
 
     def _record(self, ev: JobEvent):
         with self._ev_lock:
+            ev.seq = self._ev_seq
+            self._ev_seq += 1
             self.events.append(ev)
+
+    def _store_key(self, token: str) -> str:
+        """Remote-store key for a token ref (namespaced per run)."""
+        return self._ns + token
+
+    def _sched_key(self, path: str) -> str:
+        """Scheduler job name for an invocation path (namespaced per run
+        so concurrent runs sharing a Scheduler can't collide)."""
+        return self._ns + path
+
+    def _emit(self, ev: WorkflowEvent):
+        sink = self._sink
+        if sink is not None:
+            sink.emit(ev)
+
+    def _transition(self, path: str, state: str, *, model=None,
+                    resource=None, attempt: int = 0, error=None,
+                    speculative: bool = False):
+        """One invocation state change: journaled (write-ahead) AND
+        emitted on the live event stream.  Both dispatch loops go through
+        here, which is what makes their event sequences identical."""
+        if self.journal is not None and not speculative:
+            kw = {}
+            if model is not None:
+                kw.update(model=model, resource=resource, attempt=attempt)
+            if error is not None:
+                kw["error"] = error
+            self.journal.step(path, state, **kw)
+        if self._sink is not None:
+            ev = InvocationStateChanged(
+                path=path, state=state, model=model, resource=resource,
+                attempt=attempt, speculative=speculative, error=error)
+            self._emit(ev)
 
     # ------------------------------------------------------------------- run
     def run(self, workflow: Workflow, bindings: List[Binding],
             inputs: Optional[Dict[str, Any]] = None,
             collect: bool = True) -> RunResult:
         return self._execute(workflow, bindings, inputs, collect)
+
+    def run_stream(self, workflow: Workflow, bindings: List[Binding],
+                   inputs: Optional[Dict[str, Any]] = None,
+                   collect: bool = True, *, buffer: int = 256,
+                   sink=None) -> EventStream:
+        """Execute on a background thread and return the live event
+        stream.  Iterate it for typed events (the producer blocks when
+        the consumer lags more than ``buffer`` events behind);
+        ``.result()`` joins and returns the same RunResult ``run()``
+        would have."""
+        return EventStream(
+            self, lambda: self._execute(workflow, bindings, inputs, collect),
+            buffer=buffer, sink=sink)
+
+    def resume_stream(self, journal_path: Optional[str] = None,
+                      workflow: Optional[Workflow] = None,
+                      bindings: Optional[List[Binding]] = None,
+                      inputs: Optional[Dict[str, Any]] = None,
+                      collect: bool = True, *, buffer: int = 256,
+                      sink=None) -> EventStream:
+        """``resume()`` as an event stream: journaled history replays as
+        synthetic events (``replayed=True``) before the live ones."""
+        return EventStream(
+            self, lambda: self.resume(journal_path, workflow, bindings,
+                                      inputs, collect),
+            buffer=buffer, sink=sink)
+
+    def cancel(self):
+        """Request cooperative cancellation: in-flight invocations get
+        their cancel flag set, never-started ones are journaled
+        ``cancelled``, the journal gains a terminal ``run_cancelled``
+        record (the run stays resumable), and ``_execute`` raises
+        ``RunCancelled``."""
+        self._cancel_requested.set()
+        self._wake.set()
 
     # ---------------------------------------------------------------- resume
     def resume(self, journal_path: Optional[str] = None,
@@ -362,6 +467,32 @@ class StreamFlowExecutor:
                 pre_tokens.add(token)
             pre_completed.add(path)
 
+        # streaming resume: journaled history becomes synthetic events
+        # (replayed=True) ahead of the live ones, so a client attaching
+        # after a crash still sees the whole story in order
+        if self._sink is not None:
+            started = WorkflowStarted(workflow=plan.name,
+                                      invocations=len(plan.steps),
+                                      resumed=True)
+            self._emit(started)
+            for path in sorted(pre_completed):
+                st = state.steps.get(path)
+                ev = InvocationStateChanged(
+                    path=path, state="completed",
+                    model=st.model if st else None,
+                    resource=st.resource if st else None,
+                    attempt=st.attempt if st else 0)
+                ev.replayed = True
+                self._emit(ev)
+            for token in sorted(pre_tokens):
+                port, tag = parse_token_ref(token)
+                locs = state.token_locations.get(token, ())
+                tok = TokenAvailable(token=token, port=port, tag=tag,
+                                     model=locs[0][0] if locs else None,
+                                     resource=locs[0][1] if locs else None)
+                tok.replayed = True
+                self._emit(tok)
+
         # replay copies that were in flight at the crash; dedup/elision make
         # re-issuing safe, and the run loop re-requests anything we skip
         for token, dst_model, dst_resource in sorted(state.transfers_inflight):
@@ -442,6 +573,10 @@ class StreamFlowExecutor:
                 {} if resumed else {t: serialize(v)
                                     for t, v in inputs.items()},
                 resumed=resumed, scatter=plan.scatter_widths())
+        if not resumed:
+            # (a resumed run emitted its WorkflowStarted before replay)
+            self._emit(WorkflowStarted(workflow=plan.name,
+                                       invocations=len(plan.steps)))
 
         done_tokens = set(inputs) | set(pre_tokens or ())
         completed: set = set(pre_completed or ())
@@ -460,6 +595,13 @@ class StreamFlowExecutor:
                 if self.tick_hook is not None:
                     self.tick_hook(tick, set(completed))
                 tick += 1
+                if self._cancel_requested.is_set():
+                    # harvest first: work that finished before the cancel
+                    # landed is journaled completed and stays resumable
+                    self._harvest(running, completed, done_tokens,
+                                  failed_final, retries)
+                    self._cancel_run(plan, running, waiting, retries,
+                                     completed)
                 if failed_final:
                     step, err = next(iter(failed_final.items()))
                     raise RuntimeError(
@@ -469,8 +611,7 @@ class StreamFlowExecutor:
                            + [r["path"] for r in retries])
                 for path in plan.fireable(done_tokens, started):
                     waiting.append(path)
-                    if self.journal is not None:
-                        self.journal.step(path, "fireable")
+                    self._transition(path, "fireable")
                 # 2. launch retries whose backoff deadline passed (a step
                 # whose speculative twin finished during the backoff is
                 # already complete — don't re-execute it)
@@ -509,11 +650,18 @@ class StreamFlowExecutor:
                     starving_since = None
                     continue
                 if waiting and not running and not retries:
-                    starving_since = starving_since or time.time()
-                    if time.time() - starving_since > self.deadlock_timeout_s:
-                        raise RuntimeError(
-                            f"scheduling deadlock: waiting={waiting}, "
-                            f"no resources accept them")
+                    # under a shared scheduler, resources busy with OTHER
+                    # runs' jobs are contention, not deadlock — keep waiting
+                    # while anything is running anywhere
+                    if self._shared_scheduler and self.scheduler.has_running():
+                        starving_since = None
+                    else:
+                        starving_since = starving_since or time.time()
+                        if (time.time() - starving_since
+                                > self.deadlock_timeout_s):
+                            raise RuntimeError(
+                                f"scheduling deadlock: waiting={waiting}, "
+                                f"no resources accept them")
                 else:
                     starving_since = None
                 if self.pipelined:
@@ -542,7 +690,7 @@ class StreamFlowExecutor:
                 finished_clean = fut.done() and not fut.cancelled() \
                     and fut.exception() is None
                 self.scheduler.notify(
-                    key, JobStatus.COMPLETED if finished_clean
+                    self._sched_key(key), JobStatus.COMPLETED if finished_clean
                     else JobStatus.FAILED)
                 self._record(JobEvent(key.split("#spec")[0],
                                       rec["model"], rec["resource"],
@@ -564,11 +712,19 @@ class StreamFlowExecutor:
                                          for r in refs]
             if self.journal is not None:
                 self.journal.end_run(list(outputs))
-            return RunResult(outputs, list(self.events),
-                             list(self.data.transfers),
-                             list(self.deployment.timeline),
-                             time.time() - t_start)
-        except BaseException:
+            result = RunResult(outputs, list(self.events),
+                               list(self.data.transfers),
+                               list(self.deployment.timeline),
+                               time.time() - t_start)
+            self._emit(WorkflowCompleted(workflow=plan.name,
+                                         outputs=dict(outputs),
+                                         result=result))
+            return result
+        except BaseException as e:
+            if not isinstance(e, RunCancelled):
+                # (_cancel_run already emitted WorkflowCancelled)
+                self._emit(WorkflowFailed(workflow=plan.name, error=str(e),
+                                          error_type=type(e).__name__))
             self.deployment.undeploy_all()      # paper §4.5 exception path
             raise
         finally:
@@ -576,15 +732,64 @@ class StreamFlowExecutor:
             self.data.close()
             self.deployment.undeploy_all()
 
+    # ----------------------------------------------------------------- cancel
+    def _cancel_run(self, plan, running, waiting, retries, completed):
+        """The cancel flag landed: signal in-flight workers, give them one
+        bounded wait (work that finishes in it is kept and journaled
+        completed), release every allocation, journal never-started /
+        interrupted invocations as ``cancelled`` plus the terminal
+        ``run_cancelled`` record, and raise RunCancelled."""
+        for rec in running.values():
+            rec["cancel"].set()
+        if running:
+            futures_wait([r["future"] for r in running.values()],
+                         timeout=self.deadlock_timeout_s)
+        # abandoned workers (still not done after the wait): release them
+        for key, rec in list(running.items()):
+            fut: Future = rec["future"]
+            if not fut.done():
+                del running[key]
+                path = key.split("#spec")[0]
+                self.deployment.job_finished(rec["model"])
+                self.scheduler.notify(self._sched_key(key), JobStatus.FAILED)
+                self._record(JobEvent(path, rec["model"], rec["resource"],
+                                      rec["start"], time.time(),
+                                      rec["attempt"], "cancelled",
+                                      rec["speculative"]))
+                if not rec["speculative"] and path not in completed:
+                    self._transition(path, "cancelled", model=rec["model"],
+                                     resource=rec["resource"],
+                                     attempt=rec["attempt"])
+        # the rest finished during the wait — harvest normally so clean
+        # completions register their tokens (failures land in ``retries``
+        # and are folded into the cancelled set below)
+        done_tokens: set = set()
+        failed_final: Dict[str, Exception] = {}
+        self._harvest(running, completed, done_tokens, failed_final, retries)
+        cancelled = [p for p in dict.fromkeys(
+            waiting + [r["path"] for r in retries] + list(failed_final))
+            if p not in completed]
+        for path in cancelled:
+            self._transition(path, "cancelled")
+        waiting.clear()
+        retries.clear()
+        pending = sorted(set(plan.steps) - set(completed))
+        if self.journal is not None:
+            self.journal.cancel_run(pending)
+        self._emit(WorkflowCancelled(workflow=plan.name, pending=pending))
+        raise RunCancelled(
+            f"run cancelled with {len(pending)} invocation(s) incomplete")
+
     # --------------------------------------------------------------- schedule
     def _job_desc(self, plan, path: str, service: str) -> JobDescription:
         step = plan.steps[path]
         deps = {}
         for token in step.inputs.values():
             deps[token] = max(self.data.token_size(token), 1)
-        return JobDescription(path, step.requirements, deps, service,
+        return JobDescription(self._sched_key(path), step.requirements,
+                              deps, service,
                               fanout=len(plan.successors(path)),
-                              group=invocation_base(path),
+                              group=invocation_base(self._sched_key(path)),
                               tag=tuple(getattr(step, "tag", ())))
 
     def _avail_for(self, binding: Binding) -> List[str]:
@@ -609,15 +814,19 @@ class StreamFlowExecutor:
             return alloc.model, alloc.service
         return binding.model, binding.service
 
+    def _strip_ns(self, job_name: str) -> str:
+        """Scheduler job name back to the invocation path."""
+        return job_name[len(self._ns):] if self._ns else job_name
+
     def _schedule_queue(self, plan, bindings, waiting, running, pool):
         if not waiting:
             return waiting
         descs: Dict[str, JobDescription] = {}
-        avail: Dict[str, List[str]] = {}
+        avail: Dict[str, List[str]] = {}      # keyed by scheduler job name
         for p in waiting:
             b = self._resolve_binding(p, bindings)
             descs[p] = self._job_desc(plan, p, b.service)
-            avail[p] = self._avail_for(b)
+            avail[self._sched_key(p)] = self._avail_for(b)
         if not self.pipelined:
             return self._schedule_serial(plan, bindings, waiting,
                                          descs, avail, running, pool)
@@ -625,12 +834,14 @@ class StreamFlowExecutor:
             [descs[p] for p in waiting], avail, self.data.remote_paths)
         placed_names = set()
         for job, resource in placed:
-            self._launch(plan, job.name,
-                         self._resolve_binding(job.name, bindings), resource,
+            path = self._strip_ns(job.name)
+            self._launch(plan, path,
+                         self._resolve_binding(path, bindings), resource,
                          running, pool, attempt=0, speculative=False)
-            placed_names.add(job.name)
+            placed_names.add(path)
         still = [p for p in waiting if p not in placed_names]
-        self._stage_in(plan, bindings, still, avail)
+        self._stage_in(plan, bindings, still,
+                       {self._strip_ns(k): v for k, v in avail.items()})
         return still
 
     def _schedule_serial(self, plan, bindings, waiting, descs, avail,
@@ -640,8 +851,8 @@ class StreamFlowExecutor:
             [descs[p] for p in waiting], self.data.remote_paths)
         still = []
         for job in order:
-            path = job.name
-            resource = self.scheduler.schedule(job, avail[path],
+            path = self._strip_ns(job.name)
+            resource = self.scheduler.schedule(job, avail[job.name],
                                                self.data.remote_paths)
             if resource is None:
                 still.append(path)
@@ -717,9 +928,8 @@ class StreamFlowExecutor:
         key = path if not speculative else f"{path}#spec{attempt}"
         running[key] = rec
         self.deployment.job_started(model)
-        if self.journal is not None and not speculative:
-            self.journal.step(path, "scheduled", model=model,
-                              resource=resource, attempt=attempt)
+        self._transition(path, "scheduled", model=model, resource=resource,
+                         attempt=attempt, speculative=speculative)
         tokens = list(step.inputs.values())
         # pipelined: transfers start NOW, concurrent with other steps'
         # compute; the worker only joins the futures
@@ -727,9 +937,9 @@ class StreamFlowExecutor:
                      if self.pipelined else None)
 
         def work():
-            if self.journal is not None and not speculative:
-                self.journal.step(path, "running", model=model,
-                                  resource=resource, attempt=attempt)
+            self._transition(path, "running", model=model,
+                             resource=resource, attempt=attempt,
+                             speculative=speculative)
             if xfer_futs is None:
                 for token in tokens:            # serialized baseline (R3/R4)
                     self.data.transfer_data(token, model, resource)
@@ -768,7 +978,8 @@ class StreamFlowExecutor:
                 # lost the speculation race — record and move on
                 # (notify under the key the allocation was registered with:
                 # twins register as "path#specN", not "path")
-                self.scheduler.notify(key, JobStatus.COMPLETED)
+                self.scheduler.notify(self._sched_key(key),
+                                      JobStatus.COMPLETED)
                 self._record(JobEvent(path, model, rec["resource"],
                                       rec["start"], now, rec["attempt"],
                                       "duplicate", rec["speculative"]))
@@ -783,12 +994,19 @@ class StreamFlowExecutor:
                 # WAL ordering: "completed" is written only after every
                 # output token's location (and optional payload) is durable,
                 # so a journaled-complete step always has journaled tokens
-                if self.journal is not None:
-                    self.journal.step(path, "completed", model=model,
-                                      resource=rec["resource"],
-                                      attempt=rec["attempt"])
+                # journaled even for a speculative winner — the twin's
+                # completion IS the step's completion
+                self._transition(path, "completed", model=model,
+                                 resource=rec["resource"],
+                                 attempt=rec["attempt"])
+                for token in step.outputs:
+                    port, tag = parse_token_ref(token)
+                    self._emit(TokenAvailable(
+                        token=token, port=port, tag=tag, model=model,
+                        resource=rec["resource"]))
                 self.durations.record(service, now - rec["start"])
-                self.scheduler.notify(key, JobStatus.COMPLETED)
+                self.scheduler.notify(self._sched_key(key),
+                                      JobStatus.COMPLETED)
                 self._record(JobEvent(path, model, rec["resource"],
                                       rec["start"], now, rec["attempt"],
                                       "completed", rec["speculative"]))
@@ -798,17 +1016,18 @@ class StreamFlowExecutor:
                         r2["cancel"].set()
                 continue
             # ---- failure path ------------------------------------------------
+            self._transition(path, "failed", model=model,
+                             resource=rec["resource"],
+                             attempt=rec["attempt"],
+                             error=type(err).__name__,
+                             speculative=rec["speculative"])
             if self.journal is not None and not rec["speculative"]:
-                self.journal.step(path, "failed", model=model,
-                                  resource=rec["resource"],
-                                  attempt=rec["attempt"],
-                                  error=type(err).__name__)
                 # job-state export on the crash-relevant transition only:
                 # diagnostics for a wedged/failing run, without paying an
                 # extra fsync on every healthy completion
                 self.journal.scheduler_state(
                     self.scheduler.export_state(running_only=True))
-            self.scheduler.notify(key, JobStatus.FAILED)
+            self.scheduler.notify(self._sched_key(key), JobStatus.FAILED)
             self._record(JobEvent(path, model, rec["resource"],
                                   rec["start"], now, rec["attempt"],
                                   f"failed:{type(err).__name__}",
@@ -837,11 +1056,11 @@ class StreamFlowExecutor:
         b = rec["binding"]
         avail = self._avail_for(b)              # any target may host a retry
         job = self._job_desc(plan, path, b.service)
-        job.name = path
+        job.name = self._sched_key(path)
         resource = self.scheduler.schedule(job, avail, self.data.remote_paths)
         if resource is None and avail:
             resource = avail[0]                 # retry may oversubscribe
-            self.scheduler.jobs.pop(path, None)
+            self.scheduler.jobs.pop(self._sched_key(path), None)
         if resource is None:
             raise RuntimeError(f"no resource to retry {path}")
         self._launch(plan, path, b, resource, running, self._pool,
@@ -864,7 +1083,7 @@ class StreamFlowExecutor:
             if not avail:
                 continue
             job = self._job_desc(plan, path, b.service)
-            job.name = f"{path}#spec{rec['attempt']}"
+            job.name = self._sched_key(f"{path}#spec{rec['attempt']}")
             resource = self.scheduler.schedule(job, avail,
                                                self.data.remote_paths)
             if resource is None:

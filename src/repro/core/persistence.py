@@ -111,6 +111,10 @@ class JournalState:
         field(default_factory=dict)
     scheduler_snapshot: Optional[dict] = None
     run_ended: bool = False
+    # terminal cooperative cancel: the run stopped on purpose, with
+    # ``cancelled_pending`` invocations never completed — still resumable
+    cancelled: bool = False
+    cancelled_pending: List[str] = field(default_factory=list)
     dropped_tail_lines: int = 0
 
     def build_workflow(self):
@@ -321,6 +325,13 @@ class ExecutionJournal:
     def end_run(self, outputs: List[str]):
         self.append("run_end", outputs=sorted(outputs))
 
+    def cancel_run(self, pending: List[str]):
+        """Terminal marker for a cooperative cancel: ``pending`` lists the
+        never-completed invocation paths.  Unlike ``run_end`` this leaves
+        the run resumable — ``Executor.resume`` re-fires exactly the
+        pending frontier."""
+        self.append("run_cancelled", pending=sorted(pending))
+
     # ----------------------------------------------------------------- read
     @staticmethod
     def replay(path: str) -> JournalState:
@@ -371,6 +382,8 @@ class ExecutionJournal:
                 st.input_payloads.clear()
                 st.transfers_inflight.clear()
                 st.scheduler_snapshot = None
+            st.cancelled = False
+            st.cancelled_pending = []
             st.workflow_name = rec.get("workflow")
             st.structure = rec.get("structure") or st.structure
             st.builder = rec.get("builder") or st.builder
@@ -420,4 +433,7 @@ class ExecutionJournal:
             st.scheduler_snapshot = rec.get("state")
         elif kind == "run_end":
             st.run_ended = True
+        elif kind == "run_cancelled":
+            st.cancelled = True
+            st.cancelled_pending = list(rec.get("pending", []))
         # unknown kinds are ignored: newer journals stay readable

@@ -525,6 +525,15 @@ class Scheduler:
                               for name, r in self.resources.items()},
             }
 
+    def has_running(self) -> bool:
+        """Any allocation still RUNNING, across every run sharing this
+        scheduler — the executor's deadlock guard consults it so another
+        run's jobs holding every resource reads as contention, not
+        deadlock."""
+        with self._lock:
+            return any(a.status is JobStatus.RUNNING
+                       for a in self.jobs.values())
+
     def running_on(self, model: str) -> List[str]:
         with self._lock:
             return [j for j, a in self.jobs.items()

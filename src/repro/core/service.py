@@ -1,0 +1,502 @@
+"""Multi-tenant workflow service: TES-style submit/status/cancel/list
+over the StreamFlow executor (beyond-paper).
+
+The paper's driver runs one workflow to completion; the GA4GH Task
+Execution Service API (PAPERS.md) standardizes the long-lived shape a
+production orchestrator actually takes: clients *submit* runs, poll
+*status*, *cancel* cooperatively, and the service multiplexes everything
+over shared execution sites.  This module provides that layer:
+
+  * ``WorkflowService`` — submit/status/cancel/list/stream of ``Run``
+    objects.  Admission is per-tenant **fair share** (tenant with the
+    lowest active-runs/share ratio admits next) with **priority** and
+    FIFO order inside a tenant, under a global ``max_concurrent`` cap and
+    optional per-tenant ``max_active`` quotas.
+
+  * **Deployment pooling** — ``DeploymentPool`` wraps ONE shared
+    ``DeploymentManager`` in per-run lease façades: a run's ``deploy``
+    takes a refcounted lease (``DeploymentManager.lease``), its
+    end-of-run ``undeploy_all`` merely releases leases, and sites are
+    physically torn down only by idle keep-alive eviction once no run
+    leases them.  A hundred runs over a two-model pool pay ~two deploys,
+    not two hundred.
+
+  * Cross-run safety — admitted runs share one ``Scheduler`` (true
+    occupancy view) with per-run namespaced job names and store keys
+    (``StreamFlowExecutor(namespace=...)``), so identical token refs from
+    concurrent runs can't collide or falsely R4-elide on a shared site.
+
+  * Cooperative cancellation — ``cancel`` of a RUNNING run propagates to
+    in-flight invocations via ``Executor.cancel`` (journaling a terminal
+    ``cancelled`` state, resumable); cancel of a QUEUED run retires it
+    before admission, deploying nothing.
+
+Run states follow TES: QUEUED -> RUNNING -> COMPLETE / EXECUTOR_ERROR /
+CANCELED.  The ``service:`` block of a StreamFlow file configures all of
+it (see docs/streamflow-file.md).
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Optional
+
+from repro.core.deployment import DeploymentManager, ModelSpec
+from repro.core.events import EventSink, WorkflowCancelled
+from repro.core.executor import RunResult, StreamFlowExecutor
+from repro.core.scheduler import POLICIES, Scheduler
+from repro.core.streamflow_file import StreamFlowConfig
+
+# TES task states (GA4GH Task Execution Service)
+QUEUED = "QUEUED"
+RUNNING = "RUNNING"
+COMPLETE = "COMPLETE"
+EXECUTOR_ERROR = "EXECUTOR_ERROR"
+CANCELED = "CANCELED"
+TERMINAL_STATES = frozenset({COMPLETE, EXECUTOR_ERROR, CANCELED})
+
+
+class ServiceError(RuntimeError):
+    pass
+
+
+class UnknownRunError(KeyError):
+    pass
+
+
+@dataclass
+class TenantPolicy:
+    """Per-tenant admission policy: ``share`` weights the fair-share
+    ratio (2.0 admits twice as much concurrent work as 1.0 under
+    contention); ``max_active`` is a hard quota on concurrently RUNNING
+    runs (None = bounded only by the global cap)."""
+    share: float = 1.0
+    max_active: Optional[int] = None
+
+
+@dataclass
+class ServiceConfig:
+    """The ``service:`` block of a StreamFlow file."""
+    max_concurrent: int = 8
+    pool_enabled: bool = True
+    keepalive_s: Optional[float] = 30.0
+    default_max_active: Optional[int] = None
+    tenants: Dict[str, TenantPolicy] = field(default_factory=dict)
+
+    @classmethod
+    def from_dict(cls, d: Optional[dict]) -> "ServiceConfig":
+        d = dict(d or {})
+        pool = d.pop("pool", {})
+        tenants = {name: TenantPolicy(**t)
+                   for name, t in d.pop("tenants", {}).items()}
+        unknown = (set(d) - {"max_concurrent", "default_max_active"})
+        if unknown:
+            raise ServiceError(
+                f"unknown service key(s) {sorted(unknown)}")
+        return cls(max_concurrent=d.get("max_concurrent", 8),
+                   pool_enabled=pool.get("enabled", True),
+                   keepalive_s=pool.get("keepalive_s", 30.0),
+                   default_max_active=d.get("default_max_active"),
+                   tenants=tenants)
+
+    def tenant(self, name: str) -> TenantPolicy:
+        pol = self.tenants.get(name)
+        if pol is None:
+            pol = TenantPolicy(max_active=self.default_max_active)
+        return pol
+
+
+# ----------------------------------------------------------------- pooling
+class DeploymentPool:
+    """One shared ``DeploymentManager`` + per-run lease façades.
+
+    ``keepalive_s`` is the idle grace period: a site with zero active
+    jobs AND zero leases for that long is physically undeployed on the
+    next ``evict_idle`` (the per-tick call every hosted executor already
+    makes).  ``None`` keeps sites up until ``shutdown``."""
+
+    def __init__(self, models: Dict[str, ModelSpec], *,
+                 keepalive_s: Optional[float] = 30.0):
+        self.manager = DeploymentManager(models, grace_period_s=keepalive_s)
+        self._lock = threading.RLock()
+
+    def lease_manager(self) -> "PooledDeploymentManager":
+        return PooledDeploymentManager(self)
+
+    def evict_idle(self, pending_models: Optional[set] = None) -> List[str]:
+        return self.manager.maybe_undeploy_idle(pending_models)
+
+    @property
+    def deploy_count(self) -> int:
+        """Physical deploys performed over the pool's lifetime — the
+        number pooling exists to keep ~= the model count, not the run
+        count."""
+        return sum(1 for e in self.manager.timeline if e[1] == "deploy")
+
+    def shutdown(self):
+        self.manager.undeploy_all()
+
+
+class PooledDeploymentManager:
+    """Per-run façade duck-typing ``DeploymentManager`` for the executor
+    and DataManager: ``deploy`` takes a pool lease on first touch,
+    ``undeploy``/``undeploy_all`` release leases instead of tearing
+    sites down, and idle eviction is delegated to the pool (which skips
+    anything still leased by ANY run)."""
+
+    def __init__(self, pool: DeploymentPool):
+        self._pool = pool
+        self._inner = pool.manager
+        self._leased: set = set()
+        self._lock = threading.RLock()
+        self.journal = None               # per-run; set by the executor
+
+    # -- lifecycle (lease semantics) ----------------------------------------
+    def deploy(self, model_name: str):
+        with self._lock:
+            if model_name not in self._leased:
+                conn = self._inner.lease(model_name)
+                self._leased.add(model_name)
+                if self.journal is not None:
+                    # per-run journal: the run *attached* to a pooled site
+                    # (it may well have been deployed by an earlier run)
+                    self.journal.deployment(model_name, "attach")
+                return conn
+        return self._inner.deploy(model_name)
+
+    def undeploy(self, model_name: str):
+        with self._lock:
+            if model_name not in self._leased:
+                return
+            self._leased.discard(model_name)
+        self._inner.release(model_name)
+        if self.journal is not None:
+            self.journal.deployment(model_name, "detach")
+
+    def undeploy_all(self):
+        """End-of-run (or exception) cleanup: release every lease; the
+        pool's keep-alive decides when sites physically go away."""
+        with self._lock:
+            leased = list(self._leased)
+        for model in leased:
+            self.undeploy(model)
+        self._pool.evict_idle()
+
+    def maybe_undeploy_idle(self, pending_models: Optional[set] = None
+                            ) -> List[str]:
+        # pool-level eviction: only models NO run leases can go; the
+        # executor then forgets them from its per-run scheduler/registry
+        return self._pool.evict_idle(pending_models)
+
+    def redeploy(self, model_name: str):
+        return self._inner.redeploy(model_name)
+
+    # -- passthroughs --------------------------------------------------------
+    def register(self, spec: ModelSpec):
+        self._inner.register(spec)
+
+    def get_connector(self, model_name: str):
+        return self._inner.get_connector(model_name)
+
+    def is_deployed(self, model_name: str) -> bool:
+        return self._inner.is_deployed(model_name)
+
+    def job_started(self, model_name: str):
+        self._inner.job_started(model_name)
+
+    def job_finished(self, model_name: str):
+        self._inner.job_finished(model_name)
+
+    @property
+    def timeline(self) -> List[tuple]:
+        return self._inner.timeline
+
+    def leased_models(self) -> List[str]:
+        with self._lock:
+            return sorted(self._leased)
+
+
+# -------------------------------------------------------------------- runs
+@dataclass
+class Run:
+    """One submitted workflow execution (internal bookkeeping)."""
+    id: str
+    tenant: str
+    priority: int
+    workflow: Any
+    bindings: List[Any]
+    inputs: Optional[Dict[str, Any]]
+    collect: bool
+    checkpoint: Any
+    seq: int                               # submission order (FIFO tiebreak)
+    state: str = QUEUED
+    submitted_at: float = 0.0
+    started_at: Optional[float] = None
+    finished_at: Optional[float] = None
+    result: Optional[RunResult] = None
+    error: Optional[BaseException] = None
+    executor: Optional[StreamFlowExecutor] = None
+    sink: Optional[EventSink] = None       # pre-created when stream=True
+    stream: Any = None                     # EventStream once admitted
+    done: threading.Event = field(default_factory=threading.Event)
+
+
+@dataclass
+class RunInfo:
+    """Immutable status snapshot handed to clients (TES task view)."""
+    id: str
+    tenant: str
+    state: str
+    priority: int
+    submitted_at: float
+    started_at: Optional[float]
+    finished_at: Optional[float]
+    error: Optional[str]
+
+    @property
+    def terminal(self) -> bool:
+        return self.state in TERMINAL_STATES
+
+
+# ----------------------------------------------------------------- service
+class WorkflowService:
+    """See module docstring.  Construct from a models dict or a loaded
+    ``StreamFlowConfig`` (whose ``service:`` block configures admission
+    and pooling); submit ``(workflow, bindings, inputs)`` triples —
+    typically a ``WorkflowEntry``'s fields."""
+
+    def __init__(self, models, *, service: Optional[ServiceConfig] = None,
+                 policy: Optional[str] = None, **executor_kw):
+        if isinstance(models, StreamFlowConfig):
+            cfg = models
+            models = cfg.models
+            if service is None:
+                service = ServiceConfig.from_dict(cfg.service)
+            if policy is None:
+                policy = cfg.policy
+        self.config = service or ServiceConfig()
+        self._models = dict(models)
+        self._policy = policy or "data_locality"
+        self._executor_kw = executor_kw
+        # pooled mode: one shared manager + one shared scheduler (true
+        # occupancy view).  Unpooled mode: per-run managers AND per-run
+        # schedulers — full isolation, the deploy-per-run control.
+        self.pool: Optional[DeploymentPool] = (
+            DeploymentPool(self._models, keepalive_s=self.config.keepalive_s)
+            if self.config.pool_enabled else None)
+        self.scheduler: Optional[Scheduler] = (
+            Scheduler(POLICIES[self._policy]())
+            if self.pool is not None else None)
+        self._lock = threading.RLock()
+        self._runs: Dict[str, Run] = {}
+        self._seq = itertools.count()
+        self._active = 0
+        self._closed = False
+
+    # -- submit --------------------------------------------------------------
+    def submit(self, workflow, bindings, inputs=None, *,
+               tenant: str = "default", priority: int = 0,
+               run_id: Optional[str] = None, stream: bool = False,
+               buffer: int = 256, checkpoint=None,
+               collect: bool = True) -> str:
+        """Enqueue a run; returns its id immediately.  ``priority`` ranks
+        within the tenant (higher first); ``stream=True`` pre-opens an
+        event sink so ``stream(run_id)`` follows the run live (replaying
+        nothing: events start at admission)."""
+        with self._lock:
+            if self._closed:
+                raise ServiceError("service is closed")
+            seq = next(self._seq)
+            rid = run_id if run_id is not None else f"run-{seq}"
+            if rid in self._runs:
+                raise ServiceError(f"duplicate run id {rid!r}")
+            run = Run(id=rid, tenant=tenant, priority=priority,
+                      workflow=workflow, bindings=bindings, inputs=inputs,
+                      collect=collect, checkpoint=checkpoint, seq=seq,
+                      submitted_at=time.time(),
+                      sink=EventSink(buffer) if stream else None)
+            self._runs[rid] = run
+            self._pump_locked()
+        return rid
+
+    # -- admission (fair share + priority + quotas) ---------------------------
+    def _pump_locked(self):
+        while self._active < self.config.max_concurrent:
+            run = self._pick_locked()
+            if run is None:
+                return
+            self._admit_locked(run)
+
+    def _pick_locked(self) -> Optional[Run]:
+        active: Dict[str, int] = {}
+        for r in self._runs.values():
+            if r.state == RUNNING:
+                active[r.tenant] = active.get(r.tenant, 0) + 1
+        eligible = []
+        for r in self._runs.values():
+            if r.state != QUEUED:
+                continue
+            pol = self.config.tenant(r.tenant)
+            if pol.max_active is not None \
+                    and active.get(r.tenant, 0) >= pol.max_active:
+                continue                      # tenant at quota
+            eligible.append(r)
+        if not eligible:
+            return None
+
+        def key(r: Run):
+            pol = self.config.tenant(r.tenant)
+            ratio = active.get(r.tenant, 0) / max(pol.share, 1e-9)
+            return (ratio, -r.priority, r.seq)
+        return min(eligible, key=key)
+
+    def _admit_locked(self, run: Run):
+        run.state = RUNNING
+        run.started_at = time.time()
+        self._active += 1
+        kw = dict(self._executor_kw)
+        kw.setdefault("policy", self._policy)
+        if run.checkpoint is not None:
+            kw["checkpoint"] = run.checkpoint
+        if self.pool is not None:
+            kw["deployment"] = self.pool.lease_manager()
+            kw["scheduler"] = self.scheduler
+            kw["namespace"] = f"{run.id}/"
+        run.executor = StreamFlowExecutor(self._models, **kw)
+        if run.sink is not None:
+            run.stream = run.executor.run_stream(
+                run.workflow, run.bindings, run.inputs, run.collect,
+                sink=run.sink)
+            run.stream.add_done_callback(
+                lambda es, run=run: self._finish(run, es._result, es._error))
+        else:
+            threading.Thread(target=self._drive, args=(run,),
+                             daemon=True, name=f"sf-run-{run.id}").start()
+
+    def _drive(self, run: Run):
+        try:
+            result = run.executor.run(run.workflow, run.bindings,
+                                      run.inputs, run.collect)
+            self._finish(run, result, None)
+        except BaseException as e:          # noqa: BLE001 — recorded on Run
+            self._finish(run, None, e)
+
+    def _finish(self, run: Run, result, error):
+        from repro.core.events import RunCancelled
+        with self._lock:
+            run.finished_at = time.time()
+            run.result = result
+            run.error = error
+            if error is None:
+                run.state = COMPLETE
+            elif isinstance(error, RunCancelled):
+                run.state = CANCELED
+            else:
+                run.state = EXECUTOR_ERROR
+            self._active -= 1
+            run.done.set()
+            self._pump_locked()
+        if self.pool is not None:
+            self.pool.evict_idle()
+
+    # -- TES API --------------------------------------------------------------
+    def _run(self, run_id: str) -> Run:
+        run = self._runs.get(run_id)
+        if run is None:
+            raise UnknownRunError(run_id)
+        return run
+
+    def status(self, run_id: str) -> RunInfo:
+        with self._lock:
+            r = self._run(run_id)
+            return RunInfo(r.id, r.tenant, r.state, r.priority,
+                           r.submitted_at, r.started_at, r.finished_at,
+                           None if r.error is None else str(r.error))
+
+    def list_runs(self, *, tenant: Optional[str] = None,
+                  state: Optional[str] = None) -> List[RunInfo]:
+        with self._lock:
+            runs = sorted(self._runs.values(), key=lambda r: r.seq)
+        return [self.status(r.id) for r in runs
+                if (tenant is None or r.tenant == tenant)
+                and (state is None or r.state == state)]
+
+    def cancel(self, run_id: str) -> str:
+        """Cancel a run.  QUEUED: retired immediately — it was never
+        admitted, so nothing was ever deployed for it.  RUNNING:
+        cooperative — the executor journals ``cancelled`` and the run
+        reaches CANCELED when the flag lands.  Terminal states are
+        returned unchanged (idempotent)."""
+        with self._lock:
+            run = self._run(run_id)
+            if run.state == QUEUED:
+                run.state = CANCELED
+                run.finished_at = time.time()
+                run.done.set()
+                if run.sink is not None:
+                    run.sink.emit(WorkflowCancelled(pending=[]))
+                    run.sink.close()
+                return CANCELED
+            if run.state == RUNNING:
+                run.executor.cancel()
+                return RUNNING
+            return run.state
+
+    def stream(self, run_id: str):
+        """Iterate a run's live events (requires ``submit(stream=True)``).
+        Usable immediately after submit — events begin at admission."""
+        with self._lock:
+            run = self._run(run_id)
+            if run.sink is None:
+                raise ServiceError(
+                    f"run {run_id!r} was not submitted with stream=True")
+        return run.sink.events()
+
+    def wait(self, run_id: str, timeout: Optional[float] = None) -> RunInfo:
+        """Block until the run is terminal; returns the final snapshot."""
+        run = self._run(run_id)
+        if not run.done.wait(timeout):
+            raise TimeoutError(f"run {run_id!r} still {run.state}")
+        return self.status(run_id)
+
+    def result(self, run_id: str,
+               timeout: Optional[float] = None) -> RunResult:
+        """Block for COMPLETE and return the RunResult; re-raises the
+        run's error for EXECUTOR_ERROR/CANCELED."""
+        self.wait(run_id, timeout)
+        run = self._run(run_id)
+        if run.error is not None:
+            raise run.error
+        return run.result
+
+    def drain(self, timeout: Optional[float] = None):
+        """Wait until every submitted run is terminal."""
+        deadline = None if timeout is None else time.time() + timeout
+        while True:
+            with self._lock:
+                pending = [r for r in self._runs.values()
+                           if r.state not in TERMINAL_STATES]
+            if not pending:
+                return
+            left = None if deadline is None else deadline - time.time()
+            if left is not None and left <= 0:
+                raise TimeoutError(
+                    f"{len(pending)} run(s) still not terminal")
+            pending[0].done.wait(min(0.2, left) if left is not None else 0.2)
+
+    def close(self, *, cancel_pending: bool = True,
+              timeout: Optional[float] = None):
+        """Stop admitting, optionally cancel whatever isn't terminal,
+        drain, and tear the pool down."""
+        with self._lock:
+            self._closed = True
+            pending = [r.id for r in self._runs.values()
+                       if r.state not in TERMINAL_STATES]
+        if cancel_pending:
+            for rid in pending:
+                self.cancel(rid)
+        self.drain(timeout)
+        if self.pool is not None:
+            self.pool.shutdown()

@@ -59,6 +59,10 @@ class StreamFlowConfig:
     # the ``topology:`` block — inter-site links + routing mode; an empty
     # dict means the paper's management-node star (two-step only)
     topology: Dict[str, Any] = field(default_factory=dict)
+    # the ``service:`` block — multi-tenant admission (max_concurrent,
+    # per-tenant quotas/shares/priorities) and deployment-pool policy;
+    # consumed by repro.core.service.WorkflowService
+    service: Dict[str, Any] = field(default_factory=dict)
 
 
 def _check(cond: bool, msg: str):
@@ -234,4 +238,5 @@ def load(path_or_doc) -> StreamFlowConfig:
         grace_period_s=sched.get("grace_period_s"),
         fault=doc.get("fault", {}),
         checkpoint=ckpt,
-        topology=topology)
+        topology=topology,
+        service=doc.get("service", {}))

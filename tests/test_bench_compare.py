@@ -15,7 +15,9 @@ def _bench(*, serial=1.0, piped=0.5, scratch=3.0, resumed=1.0,
            mgmt_direct=100, mgmt_baseline=100_000, mk_direct=0.7,
            mk_mgmt=1.0, direct_n=8,
            mk_unrolled=2.4, mk_scatter=2.3, scatter_sites=2,
-           scatter_planned=50, scatter_done=50):
+           scatter_planned=50, scatter_done=50,
+           tput_pooled=140.0, tput_perrun=100.0,
+           p99_pooled=0.03, p99_perrun=0.6):
     return {"results": {
         "pipeline_makespan": [
             {"topology": "fig9", "mode": "serialized-fcfs",
@@ -42,6 +44,12 @@ def _bench(*, serial=1.0, piped=0.5, scratch=3.0, resumed=1.0,
              "count_sites": scatter_sites, "planned": scatter_planned,
              "invocations": scatter_done},
         ],
+        "service_multitenant": [
+            {"variant": "per-run", "throughput_rps": tput_perrun,
+             "lat_p99_s": p99_perrun, "deploys": 360},
+            {"variant": "pooled", "throughput_rps": tput_pooled,
+             "lat_p99_s": p99_pooled, "deploys": 2},
+        ],
     }}
 
 
@@ -56,6 +64,8 @@ def test_extract_metrics():
     assert m["scatter_makespan_ratio"] == pytest.approx(2.3 / 2.4)
     assert m["scatter_count_sites"] == 2.0
     assert m["scatter_invocations_ratio"] == pytest.approx(1.0)
+    assert m["service_throughput_ratio"] == pytest.approx(1.4)
+    assert m["service_p99_ratio"] == pytest.approx(0.05)
 
 
 def _run(tmp_path, bench, baseline_bench=None, argv_extra=()):
@@ -115,6 +125,20 @@ def test_gate_fails_when_scatter_costs_makespan(tmp_path, capsys):
     # well past the 1.25x hard ceiling: the expression itself got slow
     assert _run(tmp_path, _bench(mk_scatter=3.2)) == 1
     assert "scatter_makespan_ratio" in capsys.readouterr().out
+
+
+def test_gate_fails_when_pooling_loses_throughput(tmp_path, capsys):
+    # pooled service slower than deploying per run (hard bound 1.05)
+    assert _run(tmp_path, _bench(tput_pooled=95.0)) == 1
+    out = capsys.readouterr().out
+    assert "service_throughput_ratio" in out and "hard bound" in out
+
+
+def test_gate_fails_when_pooled_tail_balloons(tmp_path, capsys):
+    # pooled p99 back at the per-run control's level: the pool stopped
+    # absorbing site bring-up (hard ceiling 0.5)
+    assert _run(tmp_path, _bench(p99_pooled=0.55)) == 1
+    assert "service_p99_ratio" in capsys.readouterr().out
 
 
 def test_gate_fails_on_missing_benchmark_section(tmp_path, capsys):

@@ -1,0 +1,240 @@
+"""Typed event stream (PR 6 tentpole, part a): run_stream over both
+executor loops, backpressure without loss, resume replay, and
+serialized-vs-pipelined event equivalence."""
+import threading
+import time
+
+import pytest
+
+from repro.configs import recovery_demo
+from repro.configs.paper_pipeline import build_scatter_workflow
+from repro.configs.paper_pipeline import build_workflow as build_scalar
+from repro.core import (CheckpointConfig, EventSink, FaultConfig,
+                        InvocationStateChanged, ModelSpec, RunCancelled,
+                        StreamFlowExecutor, TokenAvailable, TransferRouted,
+                        WorkflowCompleted, WorkflowStarted)
+from repro.core.streamflow_file import Binding
+
+SITE = {"site": ModelSpec("site", "local",
+                          {"services": {"svc": {"replicas": 4}}})}
+BIND = [Binding("/", "site", "svc")]
+
+
+def _executor(**kw):
+    kw.setdefault("fault", FaultConfig(speculative=False))
+    return StreamFlowExecutor(SITE, **kw)
+
+
+BUILDERS = {
+    "scalar": lambda: build_scalar(n_chains=2, rows_per_chain=8,
+                                   seq_len=16, train_steps=1, batch=2,
+                                   vocab=64, d_model=16),
+    "diamond": lambda: recovery_demo.build_workflow(
+        n_blocks=3, block_rows=32, rounds=3),
+    "scatter": lambda: build_scatter_workflow(
+        n_samples=4, rows_per_sample=4, seq_len=16, train_steps=1,
+        batch=2, vocab=64, d_model=16),
+}
+
+
+# ------------------------------------------------------- terminal equality
+
+@pytest.mark.parametrize("name", sorted(BUILDERS))
+@pytest.mark.parametrize("pipelined", [True, False],
+                         ids=["pipelined", "serialized"])
+def test_stream_terminal_state_equals_run_result(name, pipelined):
+    wf = BUILDERS[name]()
+    ref = _executor(pipelined=pipelined).run(wf, BIND, {"seed": 7})
+
+    wf2 = BUILDERS[name]()
+    es = _executor(pipelined=pipelined).run_stream(wf2, BIND, {"seed": 7})
+    events = list(es)
+
+    assert isinstance(events[0], WorkflowStarted)
+    terminals = [e for e in events if isinstance(e, WorkflowCompleted)]
+    assert len(terminals) == 1 and events[-1] is terminals[0]
+    term = terminals[0]
+    assert sorted(term.outputs) == sorted(ref.outputs)
+    assert sorted(term.result.outputs) == sorted(ref.outputs)
+    assert es.result(timeout=5).outputs.keys() == ref.outputs.keys()
+    # every invocation that ran to completion is visible in the stream
+    done_paths = {e.path for e in events
+                  if isinstance(e, InvocationStateChanged)
+                  and e.state == "completed"}
+    ref_done = {e.step for e in ref.events if e.status == "completed"}
+    assert done_paths == ref_done
+
+
+def test_stream_events_are_ordered_and_stamped():
+    es = _executor().run_stream(BUILDERS["diamond"](), BIND, {"seed": 1})
+    events = list(es)
+    seqs = [e.seq for e in events]
+    assert seqs == sorted(seqs) and len(set(seqs)) == len(seqs)
+    assert all(e.t > 0 for e in events)
+    # lifecycle ordering per invocation: fireable < scheduled < running <
+    # completed in stream order
+    order = {"fireable": 0, "scheduled": 1, "running": 2, "completed": 3}
+    by_path = {}
+    for e in events:
+        if isinstance(e, InvocationStateChanged) and e.state in order:
+            by_path.setdefault(e.path, []).append(order[e.state])
+    for path, states in by_path.items():
+        assert states == sorted(states), path
+
+
+def test_token_and_transfer_events_flow():
+    es = _executor().run_stream(BUILDERS["diamond"](), BIND, {"seed": 2})
+    events = list(es)
+    tokens = [e for e in events if isinstance(e, TokenAvailable)]
+    assert {t.token for t in tokens} >= {"digest0", "combined"}
+    assert all(t.port and t.model for t in tokens)
+    transfers = [e for e in events if isinstance(e, TransferRouted)]
+    assert transfers and all(t.kind for t in transfers)
+
+
+# ------------------------------------------------------------ backpressure
+
+def test_lagging_consumer_loses_nothing():
+    """buffer=2 with a consumer slower than the producer: emit() must
+    block (not drop), so the full event story still arrives."""
+    wf = BUILDERS["diamond"]()
+    es = _executor().run_stream(wf, BIND, {"seed": 3}, buffer=2)
+    events = []
+    for ev in es:
+        time.sleep(0.002)
+        events.append(ev)
+    assert isinstance(events[-1], WorkflowCompleted)
+    seqs = [e.seq for e in events]
+    # gap-free sequence: nothing was dropped while the consumer lagged
+    assert seqs == list(range(len(events)))
+    completed = [e for e in events if isinstance(e, InvocationStateChanged)
+                 and e.state == "completed"]
+    assert len(completed) == len(wf.steps)
+
+
+def test_abandoning_consumer_does_not_wedge_the_run():
+    es = _executor().run_stream(BUILDERS["diamond"](), BIND, {"seed": 4},
+                                buffer=1)
+    it = iter(es)
+    next(it)
+    it.close()                      # consumer walks away mid-run
+    res = es.result(timeout=30)     # producer must not deadlock on emit
+    assert "combined" in res.outputs
+
+
+def test_unconsumed_stream_still_completes():
+    # nobody iterates; default buffer is larger than the event count
+    es = _executor().run_stream(BUILDERS["diamond"](), BIND, {"seed": 5})
+    assert "combined" in es.result(timeout=30).outputs
+
+
+# ------------------------------------- serialized/pipelined equivalence
+
+def _state_multiset(events):
+    """Ordering-normalized view of the invocation lifecycle: the multiset
+    of (path, state) transitions, speculative twins excluded."""
+    pairs = [(e.path, e.state) for e in events
+             if isinstance(e, InvocationStateChanged)
+             and not e.speculative]
+    return sorted(pairs)
+
+
+@pytest.mark.parametrize("name", ["diamond", "scatter"])
+def test_serialized_and_pipelined_emit_identical_lifecycles(name):
+    streams = {}
+    for pipelined in (True, False):
+        es = _executor(pipelined=pipelined).run_stream(
+            BUILDERS[name](), BIND, {"seed": 6})
+        streams[pipelined] = list(es)
+    assert _state_multiset(streams[True]) == _state_multiset(streams[False])
+    # token stories agree too (tags included — scatter shards keep identity)
+    for key in [True, False]:
+        streams[key] = sorted((e.token, e.port, tuple(e.tag))
+                              for e in streams[key]
+                              if isinstance(e, TokenAvailable))
+    assert streams[True] == streams[False]
+
+
+# ------------------------------------------------------------ resume replay
+
+class _Crash(RuntimeError):
+    pass
+
+
+def test_resume_replays_history_then_goes_live(tmp_path):
+    journal = str(tmp_path / "run.jsonl")
+    wf = recovery_demo.build_workflow(n_blocks=3, block_rows=32, rounds=3)
+    ex = _executor(checkpoint=CheckpointConfig(journal_path=journal,
+                                               include_payloads=True))
+
+    def crash(tick, completed):
+        if len(completed) >= 2:
+            raise _Crash("driver killed")
+    ex.tick_hook = crash
+    with pytest.raises(_Crash):
+        ex.run(wf, BIND, {"seed": 7})
+
+    ex2 = _executor(checkpoint=CheckpointConfig(journal_path=journal,
+                                                include_payloads=True))
+    wf2 = recovery_demo.build_workflow(n_blocks=3, block_rows=32, rounds=3)
+    es = ex2.resume_stream(journal, wf2, BIND, {"seed": 7})
+    events = list(es)
+    assert isinstance(events[0], WorkflowStarted) and events[0].resumed
+    replayed = [e for e in events if e.replayed]
+    live = [e for e in events[1:] if not e.replayed]
+    # the replay block sits between the resumed WorkflowStarted and
+    # every live event
+    assert max(e.seq for e in replayed) < min(e.seq for e in live)
+    assert any(isinstance(e, InvocationStateChanged)
+               and e.state == "completed" for e in replayed)
+    assert isinstance(events[-1], WorkflowCompleted)
+    # replayed + live completions cover the whole workflow exactly once
+    done = [e.path for e in events if isinstance(e, InvocationStateChanged)
+            and e.state == "completed"]
+    assert sorted(done) == sorted(wf2.steps)
+
+
+# --------------------------------------------- timeline stability (sat. 6)
+
+def test_timeline_rows_stable_under_equal_starts():
+    """Equal-start events used to sort non-deterministically; the recording
+    sequence number is the tiebreak now."""
+    from repro.core.executor import JobEvent, RunResult
+    events = []
+    for i, step in enumerate(["/b", "/a", "/c"]):
+        e = JobEvent(step=step, model="m", resource="r", start=1.0,
+                     end=2.0, attempt=0, status="completed")
+        e.seq = i
+        events.append(e)
+    res = RunResult(outputs={}, events=events, transfers=[],
+                    deployment_timeline=[], wall_seconds=1.0)
+    rows = [r[0] for r in res.timeline_rows()]
+    assert rows == ["/b", "/a", "/c"]
+    # and it is genuinely stable: shuffling input order changes nothing
+    res2 = RunResult(outputs={}, events=list(reversed(events)),
+                     transfers=[], deployment_timeline=[], wall_seconds=1.0)
+    assert [r[0] for r in res2.timeline_rows()] == rows
+
+
+# -------------------------------------------------------- executor cancel
+
+def test_executor_cancel_raises_runcancelled_and_journals(tmp_path):
+    journal = str(tmp_path / "cancel.jsonl")
+    wf = recovery_demo.build_workflow(n_blocks=3, block_rows=32, rounds=3)
+    ex = _executor(checkpoint=CheckpointConfig(journal_path=journal,
+                                               include_payloads=True))
+
+    def hook(tick, completed):
+        if len(completed) >= 2:
+            ex.cancel()
+    ex.tick_hook = hook
+    with pytest.raises(RunCancelled):
+        ex.run(wf, BIND, {"seed": 7})
+
+    from repro.core import ExecutionJournal
+    state = ExecutionJournal.replay(journal)
+    assert state.cancelled
+    assert state.cancelled_pending
+    assert set(state.cancelled_pending) <= set(wf.steps)
+    assert not (set(state.cancelled_pending)
+                & set(state.completed_steps))
