@@ -1,0 +1,177 @@
+"""Cross-run invocation memoization: warm re-run vs cold run.
+
+One 16-wide scatter workflow (/split -> /process x16 -> /train x16 ->
+/aggregate, 34 invocations) is submitted twice to the same
+``WorkflowService`` with the ``cache:`` block on (scope=service) and the
+deployment pool keeping sites warm between runs:
+
+  cold    first submission — every invocation executes, every output is
+          recorded in the invocation cache (digest + size + live site
+          location), and the transfer log pays the full input/feature
+          movement
+  warm    identical workflow, identical inputs, fresh run id — every
+          invocation's memo key (command identity + resolved input
+          digests + scatter tag) hits, the recorded outputs verify live
+          on the pooled sites (liveness ping + digest recheck), and the
+          run completes by CAS-aliasing cached payloads into its own
+          namespace: zero compute, zero payload movement
+
+Each /process fans a ~64 KiB feature across sites, so the cold run moves
+megabytes where the warm run moves only the final report collection.
+Reported per phase: makespan, invocation/executed/memoized counts, hit
+rate, and transfer-log bytes.  ``compare.py`` gates three claims: the
+warm makespan is at most half the cold one (``cache_warm_makespan_ratio``,
+in practice ~0.1x — the per-invocation compute cost is never paid), the
+warm run moves a small fraction of the cold run's bytes
+(``cache_bytes_ratio``), and at least 90% of invocations memoize
+(``cache_hit_rate`` — in practice all 34 do).
+"""
+from __future__ import annotations
+
+import os
+import shutil
+import tempfile
+import time
+
+from repro.core import (CacheConfig, ModelSpec, Requirements, ServiceConfig,
+                        Step, Workflow, WorkflowService)
+from repro.core.streamflow_file import Binding
+
+N_SAMPLES = 16
+STEP_COST_S = 0.06             # per-invocation compute the warm run skips
+FEATURE_FLOATS = 8192          # ~64 KiB per /process output
+HPC_SLOTS = 8
+CLOUD_SLOTS = 8
+REPEATS = 3
+
+
+def _models():
+    return {
+        "hpc": ModelSpec("hpc", "local", {
+            "services": {"svc": {"replicas": HPC_SLOTS}}}),
+        "cloud": ModelSpec("cloud", "local", {
+            "services": {"svc": {"replicas": CLOUD_SLOTS}}}),
+    }
+
+
+def _bindings():
+    # /train on the other site forces a cross-site feature hop per sample
+    # in the cold run — the bytes the warm run never moves
+    return [Binding("/split", "hpc", "svc"),
+            Binding("/process", "hpc", "svc"),
+            Binding("/train", "cloud", "svc"),
+            Binding("/aggregate", "cloud", "svc")]
+
+
+def _workflow() -> Workflow:
+    """Deterministic 16-wide scatter chain; same builder, same args, same
+    inputs => same memo keys across submissions."""
+    import numpy as np
+    wf = Workflow("cache-bench")
+
+    def split(inputs, ctx):
+        time.sleep(STEP_COST_S)
+        base = int(inputs["seed"])
+        return {"sample": [np.arange(64, dtype=np.float64) * (base + i + 1)
+                           for i in range(N_SAMPLES)]}
+
+    def process(inputs, ctx):
+        time.sleep(STEP_COST_S)
+        x = inputs["sample_in"]
+        return {"feature": np.tile(x, FEATURE_FLOATS // x.size)}
+
+    def train(inputs, ctx):
+        time.sleep(STEP_COST_S)
+        f = inputs["feature_in"]
+        return {"model": float(f.sum()) / f.size}
+
+    def aggregate(inputs, ctx):
+        time.sleep(STEP_COST_S)
+        return {"report": {"mean": sum(inputs["models"]) / N_SAMPLES,
+                           "n": N_SAMPLES}}
+
+    wf.add_step(Step("/split", split, {"seed": "seed"}, ("sample",),
+                     streams={"sample": N_SAMPLES},
+                     requirements=Requirements(cores=1)))
+    wf.add_step(Step("/process", process, {"sample_in": "sample"},
+                     ("feature",), scatter=("sample_in",),
+                     requirements=Requirements(cores=1)))
+    wf.add_step(Step("/train", train, {"feature_in": "feature"},
+                     ("model",), scatter=("feature_in",),
+                     requirements=Requirements(cores=1)))
+    wf.add_step(Step("/aggregate", aggregate, {"models": "model"},
+                     ("report",), gather=("models",),
+                     requirements=Requirements(cores=1)))
+    return wf
+
+
+def _phase_row(phase: str, svc: WorkflowService, rid: str) -> dict:
+    res = svc._runs[rid].result
+    executed = sum(1 for e in res.events if e.status == "completed")
+    memoized = sum(1 for e in res.events if e.status == "memoized")
+    planned = 3 * N_SAMPLES + 2 - N_SAMPLES  # 1 + 16 + 16 + 1
+    return {"phase": phase,
+            "invocations": planned,
+            "executed": executed,
+            "memoized": memoized,
+            "hit_rate": round(memoized / planned, 4),
+            "makespan_s": round(res.wall_seconds, 3),
+            "transfer_bytes": int(sum(r.bytes for r in res.transfers)),
+            "cache_entries": len(svc.cache) if svc.cache else 0}
+
+
+def _one_pair() -> list:
+    tmp = tempfile.mkdtemp(prefix="sf-cache-bench-")
+    svc = WorkflowService(
+        _models(),
+        service=ServiceConfig(max_concurrent=1, pool_enabled=True,
+                              keepalive_s=60.0),
+        cache=CacheConfig(index_path=os.path.join(tmp, "cache.jsonl"),
+                          scope="service"),
+        max_workers=2 * max(HPC_SLOTS, CLOUD_SLOTS),
+        transfer_workers=4, deadlock_timeout_s=15.0)
+    try:
+        rows = []
+        for phase in ("cold", "warm"):
+            rid = svc.submit(_workflow(), _bindings(), {"seed": 7})
+            info = svc.wait(rid, timeout=300)
+            if info.state != "COMPLETE":
+                raise RuntimeError(
+                    f"{phase} run ended {info.state}: {info.error}")
+            rows.append(_phase_row(phase, svc, rid))
+        return rows
+    finally:
+        svc.close()
+        shutil.rmtree(tmp, ignore_errors=True)
+
+
+def run(verbose=True, repeats: int = REPEATS):
+    # the hit counts are deterministic; only the wall ratio is noisy, so
+    # take the median pair by warm/cold makespan ratio
+    pairs = sorted((_one_pair() for _ in range(repeats)),
+                   key=lambda p: p[1]["makespan_s"] / p[0]["makespan_s"])
+    rows = pairs[len(pairs) // 2]
+
+    if verbose:
+        hdr = ["phase", "invocations", "executed", "memoized", "hit_rate",
+               "makespan_s", "transfer_bytes", "cache_entries"]
+        print(" | ".join(f"{h:>14s}" for h in hdr))
+        for r in rows:
+            print(" | ".join(f"{str(r[h]):>14s}" for h in hdr))
+        cold, warm = rows
+        print(f"\n[claim] warm re-run memoized {warm['memoized']}/"
+              f"{warm['invocations']} invocations "
+              f"(hit rate {warm['hit_rate']:.0%}); makespan "
+              f"{cold['makespan_s']:.3f}s -> {warm['makespan_s']:.3f}s "
+              f"({warm['makespan_s'] / max(cold['makespan_s'], 1e-9):.2f}x),"
+              f" bytes {cold['transfer_bytes']} -> "
+              f"{warm['transfer_bytes']}")
+    return rows
+
+
+def main(argv=None):
+    run()
+
+
+if __name__ == "__main__":
+    main()

@@ -32,12 +32,12 @@ def run(verbose=True):
             mb * 131072).astype(np.float32)          # mb MiB
         for mode, shared in (("separate", False), ("shared-fs", True)):
             d = _world(shared=shared)
-            d.put_local("tok", payload)
+            ref = d.put("tok", payload)
             t0 = time.time()
-            r1 = d.transfer_data("tok", "hpc", "hpc/x/0")     # seed site
-            r2 = d.transfer_data("tok", "hpc", "hpc/x/1")     # intra-model
-            r3 = d.transfer_data("tok", "cloud", "cloud/y/0")  # two-step
-            r4 = d.transfer_data("tok", "cloud", "cloud/y/0")  # R4 elide
+            r1 = d.transfer_sync(ref, "hpc", "hpc/x/0")      # seed site
+            r2 = d.transfer_sync(ref, "hpc", "hpc/x/1")      # intra-model
+            r3 = d.transfer_sync(ref, "cloud", "cloud/y/0")  # two-step
+            r4 = d.transfer_sync(ref, "cloud", "cloud/y/0")  # R4 elide
             rows.append({
                 "MiB": mb, "mode": mode,
                 "intra_kind": r2.kind, "intra_s": r2.seconds,

@@ -23,10 +23,10 @@ def _timed(fn, *a, **kw):
 
 
 def _sections():
-    from benchmarks import (bench_deployment, bench_fault, bench_pipeline,
-                            bench_recovery, bench_routing, bench_scatter,
-                            bench_scheduler, bench_service, bench_timeline,
-                            bench_transfer)
+    from benchmarks import (bench_cache, bench_deployment, bench_fault,
+                            bench_pipeline, bench_recovery, bench_routing,
+                            bench_scatter, bench_scheduler, bench_service,
+                            bench_timeline, bench_transfer)
 
     def timeline():
         out, us = _timed(bench_timeline.run, "both")
@@ -88,6 +88,15 @@ def _sections():
                          f"deploys={by['per-run']['deploys']}"
                          f"->{by['pooled']['deploys']}")
 
+    def cache():
+        out, us = _timed(bench_cache.run)
+        by = {r["phase"]: r for r in out}
+        return out, us, (f"hit_rate={by['warm']['hit_rate']};"
+                         f"makespan={by['cold']['makespan_s']}s"
+                         f"->{by['warm']['makespan_s']}s;"
+                         f"bytes={by['cold']['transfer_bytes']}"
+                         f"->{by['warm']['transfer_bytes']}")
+
     def scatter():
         out, us = _timed(bench_scatter.run)
         by = {r["mode"]: r for r in out}
@@ -116,6 +125,8 @@ def _sections():
          "hand-unrolled control", scatter),
         ("service_multitenant", "bench_service — pooled vs per-run "
          "deployments under bursty multi-tenant load", service),
+        ("cache_memoization", "bench_cache — cross-run invocation "
+         "memoization: warm re-run vs cold", cache),
     ]
 
 

@@ -4,12 +4,16 @@ Workflow (DAG + POSIX step ids) x declarative multi-site environments
 (Connector implementations) wired by a StreamFlow file, executed by a
 locality-aware FCFS scheduler with R1-R4 semantics (atomic deployment
 units, task->service bindings, two-step baseline transfers, elision).
+
+``__all__`` below IS the supported public surface: additions and removals
+are deliberate API changes (tests/test_public_api.py snapshots it, so an
+unannounced drift fails CI).
 """
 from repro.core.workflow import (Workflow, Step, Requirements, Port, Token,
                                  Invocation, InvocationPlan, match_binding,
                                  token_ref, parse_token_ref, invocation_base)
 from repro.core.connector import (Connector, ConnectorCopyKind, ObjectStore,
-                                  serialize, deserialize)
+                                  content_digest, serialize, deserialize)
 from repro.core.connectors import (LocalConnector, MeshConnector,
                                    MultiPodConnector, SimClusterConnector,
                                    make_connector)
@@ -20,7 +24,8 @@ from repro.core.scheduler import (Scheduler, Policy, DataLocalityPolicy,
                                   WidestFirstPolicy, ScatterSpreadPolicy,
                                   JobDescription, JobAllocation,
                                   ResourceAllocation, JobStatus, POLICIES)
-from repro.core.datamanager import DataManager, RoutePlan, TransferRecord
+from repro.core.datamanager import (DataManager, DataRef, RoutePlan,
+                                    TransferRecord)
 from repro.core.topology import (LinkSpec, MANAGEMENT, Route,
                                  TopologyGraph)
 from repro.core.streamflow_file import (load as load_streamflow_file,
@@ -28,8 +33,10 @@ from repro.core.streamflow_file import (load as load_streamflow_file,
                                         StreamFlowFileError, validate)
 from repro.core.executor import StreamFlowExecutor, RunResult, JobEvent
 from repro.core.fault import FaultConfig, DurationTracker
-from repro.core.persistence import (CheckpointConfig, ExecutionJournal,
-                                    JournalError, JournalState)
+from repro.core.persistence import (CacheConfig, CheckpointConfig,
+                                    ExecutionJournal, InvocationCache,
+                                    JournalError, JournalState,
+                                    invocation_memo_key)
 from repro.core.events import (EventSink, EventStream, RunCancelled,
                                WorkflowEvent, WorkflowStarted,
                                InvocationStateChanged, TokenAvailable,
@@ -43,3 +50,46 @@ from repro.core.service import (WorkflowService, ServiceConfig, TenantPolicy,
                                 CANCELED, TERMINAL_STATES)
 from repro.core.connectors import (start_external_site, get_external_site,
                                    stop_external_site)
+
+__all__ = [
+    # workflow / dataflow model
+    "Workflow", "Step", "Requirements", "Port", "Token",
+    "Invocation", "InvocationPlan", "match_binding",
+    "token_ref", "parse_token_ref", "invocation_base",
+    # connectors + stores
+    "Connector", "ConnectorCopyKind", "ObjectStore", "content_digest",
+    "serialize", "deserialize",
+    "LocalConnector", "MeshConnector", "MultiPodConnector",
+    "SimClusterConnector", "make_connector",
+    "start_external_site", "get_external_site", "stop_external_site",
+    # deployment
+    "DeploymentManager", "ModelSpec",
+    # scheduling
+    "Scheduler", "Policy", "DataLocalityPolicy", "RoundRobinPolicy",
+    "LoadBalancePolicy", "BackfillPolicy", "LocalityBatchPolicy",
+    "WidestFirstPolicy", "ScatterSpreadPolicy", "JobDescription",
+    "JobAllocation", "ResourceAllocation", "JobStatus", "POLICIES",
+    # data plane
+    "DataManager", "DataRef", "RoutePlan", "TransferRecord",
+    "LinkSpec", "MANAGEMENT", "Route", "TopologyGraph",
+    # config loading
+    "load_streamflow_file", "StreamFlowConfig", "Binding",
+    "StreamFlowFileError", "validate",
+    # execution
+    "StreamFlowExecutor", "RunResult", "JobEvent",
+    "FaultConfig", "DurationTracker",
+    # persistence: journal + cross-run cache
+    "CacheConfig", "CheckpointConfig", "ExecutionJournal",
+    "InvocationCache", "JournalError", "JournalState",
+    "invocation_memo_key",
+    # events
+    "EventSink", "EventStream", "RunCancelled", "WorkflowEvent",
+    "WorkflowStarted", "InvocationStateChanged", "TokenAvailable",
+    "TransferRouted", "WorkflowCompleted", "WorkflowFailed",
+    "WorkflowCancelled", "TERMINAL_EVENTS",
+    # service
+    "WorkflowService", "ServiceConfig", "TenantPolicy", "DeploymentPool",
+    "PooledDeploymentManager", "Run", "RunInfo", "ServiceError",
+    "UnknownRunError", "QUEUED", "RUNNING", "COMPLETE", "EXECUTOR_ERROR",
+    "CANCELED", "TERMINAL_STATES",
+]

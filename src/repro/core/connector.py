@@ -18,6 +18,7 @@ from __future__ import annotations
 
 import abc
 import enum
+import hashlib
 import pickle
 import threading
 import time
@@ -39,26 +40,81 @@ class ResourceInfo:
     memory_gb: float = 4.0
 
 
+def content_digest(payload: bytes) -> str:
+    """Canonical content digest of a serialized payload (sha256 hex).
+
+    This is the identity the whole data plane keys on: CAS dedup inside a
+    store, the planner's "already-present" elision across stores, and the
+    invocation memo key all hash the same way."""
+    return hashlib.sha256(payload).hexdigest()
+
+
 class ObjectStore:
-    """Per-resource keyed payload store with byte accounting.  ``name``
-    identifies the owning resource (or site, for shared stores) so a
-    missed lookup names where the token was expected, not just its key."""
+    """Per-resource content-addressed payload store with byte accounting.
+
+    Paths (token keys) index into a digest-keyed CAS: each distinct payload
+    is held once, however many paths reference it, so duplicate puts on a
+    site cost no extra memory and ``size``/``exists``/``digest_of`` answer
+    from the path→digest index alone.  ``name`` identifies the owning
+    resource (or site, for shared stores) so a missed lookup names where
+    the token was expected, not just its key.
+
+    Byte accounting is deliberately *logical*: ``bytes_in``/``bytes_out``
+    count what callers pushed/pulled (every put and get, dedup or not) so
+    transfer metrics are invariant to the CAS internals; the dedup win is
+    visible separately via ``dedup_puts``/``dedup_bytes``/``unique_bytes``.
+    Metadata probes (``exists``/``size``/``digest_of``/``has_digest``/
+    ``link_digest``) never touch the byte counters."""
 
     def __init__(self, name: str = "store"):
         self.name = name
-        self._data: Dict[str, bytes] = {}
+        self._cas: Dict[str, bytes] = {}      # digest -> payload (once)
+        self._index: Dict[str, str] = {}      # path -> digest
+        self._refs: Dict[str, int] = {}       # digest -> live path count
         self._lock = threading.Lock()
         self.bytes_in = 0
         self.bytes_out = 0
+        self.dedup_puts = 0     # puts whose payload was already held
+        self.dedup_bytes = 0    # bytes those puts did NOT duplicate
 
-    def put(self, path: str, payload: bytes):
+    # -- internal (lock held) -------------------------------------------------
+    def _bind(self, path: str, digest: str):
+        old = self._index.get(path)
+        if old == digest:
+            return
+        self._index[path] = digest
+        self._refs[digest] = self._refs.get(digest, 0) + 1
+        if old is not None:
+            self._release(old)
+
+    def _release(self, digest: str):
+        n = self._refs.get(digest, 0) - 1
+        if n <= 0:
+            self._refs.pop(digest, None)
+            self._cas.pop(digest, None)
+        else:
+            self._refs[digest] = n
+
+    # -- data plane -----------------------------------------------------------
+    def put(self, path: str, payload: bytes) -> str:
+        """Store a payload under ``path``; returns its content digest.
+        A duplicate put (payload already in the CAS) only adds an index
+        entry — the bytes are not held twice."""
+        digest = content_digest(payload)
         with self._lock:
-            self._data[path] = payload
+            if digest in self._cas:
+                self.dedup_puts += 1
+                self.dedup_bytes += len(payload)
+            else:
+                self._cas[digest] = payload
+            self._bind(path, digest)
             self.bytes_in += len(payload)
+        return digest
 
     def get(self, path: str) -> bytes:
         with self._lock:
-            payload = self._data.get(path)
+            digest = self._index.get(path)
+            payload = self._cas.get(digest) if digest is not None else None
             if payload is None:
                 raise KeyError(
                     f"object store {self.name!r} holds no payload at "
@@ -69,23 +125,55 @@ class ObjectStore:
 
     def exists(self, path: str) -> bool:
         with self._lock:
-            return path in self._data
+            return path in self._index
 
     def size(self, path: str) -> int:
         """Byte length of a stored payload, or -1 when absent.  A metadata
         probe: does NOT touch the bytes_in/bytes_out accounting, so
         planners may ask freely without polluting transfer metrics."""
         with self._lock:
-            payload = self._data.get(path)
-            return -1 if payload is None else len(payload)
+            digest = self._index.get(path)
+            if digest is None:
+                return -1
+            return len(self._cas[digest])
 
     def delete(self, path: str):
+        """Drop a path; the payload survives while other paths share its
+        digest and is freed with the last reference."""
         with self._lock:
-            self._data.pop(path, None)
+            digest = self._index.pop(path, None)
+            if digest is not None:
+                self._release(digest)
 
     def paths(self) -> List[str]:
         with self._lock:
-            return list(self._data)
+            return list(self._index)
+
+    # -- content addressing (all metadata probes: counter-neutral) ------------
+    def digest_of(self, path: str) -> Optional[str]:
+        """Content digest stored at ``path``, or None when absent."""
+        with self._lock:
+            return self._index.get(path)
+
+    def has_digest(self, digest: str) -> bool:
+        """True if any live path in this store holds the payload."""
+        with self._lock:
+            return digest in self._cas
+
+    def link_digest(self, path: str, digest: str) -> bool:
+        """Alias ``path`` to a payload already in the CAS — the zero-cost
+        'already-present' route.  Returns False (and changes nothing) when
+        the digest is not held here; no bytes move either way."""
+        with self._lock:
+            if digest not in self._cas:
+                return False
+            self._bind(path, digest)
+            return True
+
+    def unique_bytes(self) -> int:
+        """Bytes physically held (one copy per digest)."""
+        with self._lock:
+            return sum(len(p) for p in self._cas.values())
 
 
 def serialize(value: Any) -> bytes:

@@ -9,20 +9,28 @@ R4 — transfers are elided when the token is already present at the target;
 a cheap local *staging* copy is still made (the paper does the same so
 in-place modifications can't corrupt inputs).
 
-Beyond-paper (flagged): with a ``TopologyGraph`` attached,
-``transfer_data`` is a *router* — every live replica of the token is a
-candidate source, every (source -> destination) route is scored against
-the declared link graph (direct site-to-site hop, sibling-LAN hop,
-management push, or the R3 two-step fallback), and the cheapest executes.
-``routing: management`` in the topology block (or no topology at all)
-keeps every inter-model move on the paper's two-step path — the measured
-control.
+Beyond-paper (flagged): with a ``TopologyGraph`` attached, a transfer is
+*routed* — every live replica of the token is a candidate source, every
+(source -> destination) route is scored against the declared link graph
+(direct site-to-site hop, sibling-LAN hop, management push, or the R3
+two-step fallback), and the cheapest executes.  ``routing: management``
+in the topology block (or no topology at all) keeps every inter-model
+move on the paper's two-step path — the measured control.
 
-Beyond-paper (flagged): the pipelined executor issues transfers
-*asynchronously* — ``transfer_data_async`` returns a Future so token
-movement for step N+1 overlaps compute of step N.  In-flight transfers are
-deduplicated per (token, destination): two consumers of one token trigger
-one physical copy, the second rides the first's Future.
+Beyond-paper (flagged): the data plane is *async-first* —
+``transfer(ref, dst_model, dst_resource)`` returns a Future so token
+movement for step N+1 overlaps compute of step N, with in-flight
+transfers deduplicated per (token, destination): two consumers of one
+token trigger one physical copy, the second rides the first's Future.
+``transfer_sync`` runs the same single route implementation inline (the
+serialized executor's path).  With ``content_routing`` on (cache-enabled
+runs), the planner adds a zero-cost *digest* route: when the destination
+store already holds the payload under any path, the transfer collapses
+to an index alias and the journal records it as elided-by-digest.
+
+Values enter and leave the plane as typed ``DataRef`` handles
+(key + content digest + size + scatter tag) via ``put``/``get``; the old
+``put_local``/``get_local`` spellings survive as deprecation shims.
 
 Every movement is appended to ``transfers`` — the benchmark harness reads
 this log to produce the paper's overhead accounting.  ``mgmt_bytes()``
@@ -33,14 +41,40 @@ from __future__ import annotations
 
 import threading
 import time
+import warnings
 from concurrent.futures import Future, ThreadPoolExecutor
 from dataclasses import dataclass, field
-from typing import Any, Dict, List, Optional, Tuple
+from typing import Any, Dict, List, Optional, Tuple, Union
 
 from repro.core.connector import (Connector, ConnectorCopyKind, ObjectStore,
                                   deserialize, serialize)
 from repro.core.topology import MANAGEMENT, Route, TopologyGraph
 from repro.core.workflow import parse_token_ref
+
+
+@dataclass(frozen=True)
+class DataRef:
+    """Typed handle to one token's payload — the public currency of the
+    data plane.  ``key`` is the token ref (``port[tag]``), ``digest`` the
+    content address of the serialized payload, ``size`` its byte length
+    and ``tag`` the scatter coordinate parsed from the key.  Everywhere a
+    token string used to travel, a DataRef can travel instead and carries
+    the content identity with it."""
+    key: str
+    digest: str
+    size: int
+    tag: Tuple[int, ...] = ()
+
+    @property
+    def port(self) -> str:
+        return parse_token_ref(self.key)[0]
+
+    def __str__(self) -> str:        # transfer APIs accept DataRef | str
+        return self.key
+
+
+def _token_key(ref: Union["DataRef", str]) -> str:
+    return ref.key if isinstance(ref, DataRef) else ref
 
 
 @dataclass
@@ -73,11 +107,12 @@ class _Location:
 @dataclass
 class RoutePlan:
     """One scored way of bringing a token to a destination."""
-    kind: str                       # elided|staging|intra-model|direct|
-    #                                 mgmt-push|two-step
+    kind: str                       # elided|staging|digest|intra-model|
+    #                                 direct|mgmt-push|two-step
     cost: float
     source: Optional[_Location] = None     # None for mgmt-push/elided
     route: Optional[Route] = None          # topology path, when planned
+    digest: Optional[str] = None           # content address (digest route)
 
     def describe(self) -> str:
         return self.route.describe() if self.route is not None else self.kind
@@ -87,11 +122,17 @@ class DataManager:
     def __init__(self, deployment_manager, scheduler=None, *,
                  transfer_workers: int = 8, journal=None,
                  topology: Optional[TopologyGraph] = None,
-                 key_prefix: str = ""):
+                 key_prefix: str = "", content_routing: bool = False):
         self.deployment_manager = deployment_manager
         self.scheduler = scheduler
         self.journal = journal                     # ExecutionJournal | None
         self.topology = topology                   # TopologyGraph | None
+        # content-addressed routing: when on (cache-enabled runs), the
+        # planner may satisfy a transfer by digest — the destination store
+        # already holds the payload under *some* path, so the route is a
+        # zero-cost index alias.  Off by default: `cache: off` runs must
+        # produce byte-identical transfer logs to the pre-CAS engine.
+        self.content_routing = content_routing
         # remote store keys get this per-run prefix so concurrent runs on
         # shared (pooled) sites can't collide — or falsely R4-elide — on
         # identical token refs; the per-run management store stays raw
@@ -176,11 +217,54 @@ class DataManager:
             return 0
 
     # -- value plane (management-node helpers) ------------------------------------
+    def put(self, key: str, value: Any) -> DataRef:
+        """Serialize ``value`` into the management store under ``key`` and
+        return its typed handle (key + content digest + size + tag)."""
+        payload = serialize(value)
+        digest = self.local_store.put(key, payload)
+        _port, tag = parse_token_ref(key)
+        return DataRef(key=key, digest=digest, size=len(payload), tag=tag)
+
+    def get(self, ref: Union[DataRef, str]) -> Any:
+        """Deserialize the payload a DataRef (or raw token key) names out
+        of the management store."""
+        return deserialize(self.local_store.get(_token_key(ref)))
+
     def put_local(self, token: str, value: Any):
-        self.local_store.put(token, serialize(value))
+        """Deprecated spelling of :meth:`put` (returns nothing)."""
+        warnings.warn(
+            "DataManager.put_local is deprecated; use put(), which "
+            "returns a typed DataRef", DeprecationWarning, stacklevel=2)
+        self.put(token, value)
 
     def get_local(self, token: str) -> Any:
-        return deserialize(self.local_store.get(token))
+        """Deprecated spelling of :meth:`get`."""
+        warnings.warn(
+            "DataManager.get_local is deprecated; use get(), which also "
+            "accepts a DataRef", DeprecationWarning, stacklevel=2)
+        return self.get(token)
+
+    def token_digest(self, token: str) -> Optional[str]:
+        """Content digest of a token's payload, from whichever store holds
+        it (management first, then registered replicas).  Counter-neutral:
+        digest lookups never move bytes."""
+        token = _token_key(token)
+        digest = self.local_store.digest_of(token)
+        if digest is not None:
+            return digest
+        with self._lock:
+            locs = list(self.remote_paths.get(token, []))
+        for loc in locs:
+            conn = self.deployment_manager.get_connector(loc.model)
+            if conn is None:
+                continue
+            try:
+                digest = conn.store(loc.resource).digest_of(loc.path)
+            except KeyError:
+                continue
+            if digest is not None:
+                return digest
+        return None
 
     # -- the route planner (R3/R4 + topology routing) ---------------------------
     def _live_replicas(self, token: str) -> List[_Location]:
@@ -232,6 +316,13 @@ class DataManager:
         if dst_conn.shared_data_space() and any(
                 l.model == dst_model for l in live):
             return RoutePlan("staging", 0.0)
+        if self.content_routing:
+            # fleet-wide R4: the destination store holds the *payload*
+            # under some other path (an earlier run's key, a duplicate
+            # artifact) — the transfer is an index alias, zero bytes
+            digest = self.token_digest(token)
+            if digest is not None and dst_store.has_digest(digest):
+                return RoutePlan("digest", 0.0, digest=digest)
 
         size = max(self.token_size(token), 1)
         topo = self.topology
@@ -293,10 +384,14 @@ class DataManager:
             costs.append(self.topology.cost(MANAGEMENT, dst_model, size))
         return min(costs) if costs else 0.0
 
-    def transfer_data(self, token: str, dst_model: str, dst_resource: str
-                      ) -> TransferRecord:
-        """Ensure ``token`` is present at (dst_model, dst_resource), over
-        the cheapest planned route."""
+    def transfer_sync(self, ref: Union[DataRef, str], dst_model: str,
+                      dst_resource: str) -> TransferRecord:
+        """Ensure a token is present at (dst_model, dst_resource), over the
+        cheapest planned route, synchronously in the calling thread.  This
+        is the single implementation both entry points share; prefer the
+        async-first :meth:`transfer` on hot paths (it adds in-flight
+        deduplication per destination)."""
+        token = _token_key(ref)
         t0 = time.time()
         dst_conn = self.deployment_manager.get_connector(dst_model)
         if dst_conn is None:
@@ -319,6 +414,21 @@ class DataManager:
                        journaled=False)
             return rec
 
+        if plan.kind == "digest":
+            # zero-cost content route: alias this run's key onto the
+            # payload the destination already holds — no bytes move
+            dst_store.link_digest(self._rkey(token), plan.digest)
+            rec = TransferRecord(token, "elided", None, dst_tag, 0,
+                                 time.time() - t0, route="digest")
+            if self.journal is not None:
+                # replay treats unknown transfer states as inert, but the
+                # journal still shows WHY no copy happened for this token
+                self.journal.transfer(token, dst_model, dst_resource,
+                                      "elided-by-digest", route="digest")
+            self._done(rec, dst_model, dst_resource, token, epoch,
+                       journaled=False)
+            return rec
+
         if self.journal is not None:
             # write-ahead: a copy that was in flight when the driver died is
             # journaled as started-but-not-done; resume re-issues it and the
@@ -335,7 +445,7 @@ class DataManager:
             # the source site died between planning and execution: re-plan
             # (liveness filtering drops its replicas on the next pass, so
             # this converges to another source or a clean KeyError)
-            return self.transfer_data(token, dst_model, dst_resource)
+            return self.transfer_sync(token, dst_model, dst_resource)
         if plan.kind == "mgmt-push":
             # one hop: the management node already holds the payload
             n = dst_conn.copy(token, self._rkey(token),
@@ -433,18 +543,21 @@ class DataManager:
                     thread_name_prefix="sf-xfer")
             return self._xfer_pool
 
-    def transfer_data_async(self, token: str, dst_model: str,
-                            dst_resource: str) -> Future:
-        """Issue (or join) an asynchronous transfer of ``token`` to the
-        destination.  One physical copy per (token, destination) is in
-        flight at a time — concurrent consumers share the same Future."""
+    def transfer(self, ref: Union[DataRef, str], dst_model: str,
+                 dst_resource: str) -> Future:
+        """Issue (or join) an asynchronous transfer of a token to the
+        destination — the async-first entry point of the data plane.  One
+        physical copy per (token, destination) is in flight at a time:
+        concurrent consumers share the same Future.  ``transfer_sync`` is
+        the inline wrapper around the same route execution."""
+        token = _token_key(ref)
         key = (token, dst_model, dst_resource)
         with self._lock:
             fut = self._inflight.get(key)
             if fut is not None:
                 self.dedup_hits += 1
                 return fut
-            fut = self._pool().submit(self.transfer_data, token,
+            fut = self._pool().submit(self.transfer_sync, token,
                                       dst_model, dst_resource)
             self._inflight[key] = fut
 
@@ -457,11 +570,23 @@ class DataManager:
         fut.add_done_callback(_clear)
         return fut
 
+    # deprecated spellings, kept callable so pre-DataRef code keeps
+    # working: both near-duplicates now share ONE route implementation
+    def transfer_data(self, token: Union[DataRef, str], dst_model: str,
+                      dst_resource: str) -> TransferRecord:
+        """Deprecated spelling of :meth:`transfer_sync`."""
+        return self.transfer_sync(token, dst_model, dst_resource)
+
+    def transfer_data_async(self, token: Union[DataRef, str],
+                            dst_model: str, dst_resource: str) -> Future:
+        """Deprecated spelling of :meth:`transfer`."""
+        return self.transfer(token, dst_model, dst_resource)
+
     def prefetch(self, tokens, dst_model: str, dst_resource: str
                  ) -> List[Future]:
         """Start moving every token toward a freshly-scheduled step's
         resource; returns the futures the worker must await before it runs."""
-        return [self.transfer_data_async(t, dst_model, dst_resource)
+        return [self.transfer(t, dst_model, dst_resource)
                 for t in tokens]
 
     def close(self):

@@ -74,6 +74,9 @@ class InvocationStateChanged(WorkflowEvent):
     attempt: int = 0
     speculative: bool = False
     error: Optional[str] = None
+    # provenance: True when the invocation was satisfied from the
+    # cross-run cache instead of executing — timelines stay honest
+    memoized: bool = False
 
 
 @dataclass

@@ -68,8 +68,10 @@ from repro.core.events import (EventStream, InvocationStateChanged,
                                WorkflowEvent, WorkflowFailed,
                                WorkflowStarted)
 from repro.core.fault import DurationTracker, FaultConfig
-from repro.core.persistence import (CheckpointConfig, ExecutionJournal,
-                                    JournalError, JournalState)
+from repro.core.persistence import (CacheConfig, CheckpointConfig,
+                                    ExecutionJournal, InvocationCache,
+                                    JournalError, JournalState,
+                                    invocation_memo_key)
 from repro.core.scheduler import (JobDescription, JobStatus, POLICIES,
                                   Scheduler)
 from repro.core.streamflow_file import Binding, StreamFlowConfig
@@ -158,7 +160,8 @@ class StreamFlowExecutor:
                  topology=None,
                  deployment=None,
                  scheduler=None,
-                 namespace: str = ""):
+                 namespace: str = "",
+                 cache=None):
         # deployment/scheduler: inject shared (service-owned) managers —
         # ``deployment`` may be a pooled lease façade; a shared
         # ``scheduler`` gives this run a true view of site occupancy
@@ -171,6 +174,17 @@ class StreamFlowExecutor:
         elif isinstance(checkpoint, dict):
             checkpoint = CheckpointConfig.from_dict(checkpoint)
         self.journal = ExecutionJournal.from_checkpoint(checkpoint)
+        # cache: InvocationCache (service-shared) | CacheConfig | the raw
+        # ``cache:`` block value (dict/bool) | index-path str | None.
+        # None == disabled == the engine's exact pre-cache behaviour.
+        if isinstance(cache, str):
+            cache = CacheConfig(index_path=cache)
+        if not isinstance(cache, (InvocationCache, type(None))):
+            cache = InvocationCache.from_config(
+                cache if isinstance(cache, CacheConfig)
+                else CacheConfig.from_value(cache))
+        self.cache: Optional[InvocationCache] = cache
+        self._memo_keys: Dict[str, str] = {}   # invocation path -> memo key
         # topology: TopologyGraph | raw ``topology:`` block dict | None
         if isinstance(topology, dict):
             topology = (TopologyGraph.from_config(models, topology)
@@ -214,7 +228,11 @@ class StreamFlowExecutor:
         self.data = DataManager(self.deployment, self.scheduler,
                                 transfer_workers=transfer_workers,
                                 journal=self.journal, topology=topology,
-                                key_prefix=namespace)
+                                key_prefix=namespace,
+                                # digest-aware zero-cost routing only when
+                                # the cache is on: `cache: off` runs keep
+                                # byte-identical transfer logs
+                                content_routing=self.cache is not None)
         self.fault = fault or FaultConfig()
         self.durations = DurationTracker()
         self.max_workers = max_workers
@@ -238,6 +256,7 @@ class StreamFlowExecutor:
         kw.setdefault("grace_period_s", cfg.grace_period_s)
         kw.setdefault("fault", FaultConfig.from_dict(cfg.fault))
         kw.setdefault("topology", cfg.topology or None)
+        kw.setdefault("cache", cfg.cache or None)
         return cls(cfg.models, **kw)
 
     # ------------------------------------------------------------------ utils
@@ -287,7 +306,7 @@ class StreamFlowExecutor:
 
     def _transition(self, path: str, state: str, *, model=None,
                     resource=None, attempt: int = 0, error=None,
-                    speculative: bool = False):
+                    speculative: bool = False, memoized: bool = False):
         """One invocation state change: journaled (write-ahead) AND
         emitted on the live event stream.  Both dispatch loops go through
         here, which is what makes their event sequences identical."""
@@ -297,11 +316,14 @@ class StreamFlowExecutor:
                 kw.update(model=model, resource=resource, attempt=attempt)
             if error is not None:
                 kw["error"] = error
+            if memoized:
+                kw["memoized"] = True
             self.journal.step(path, state, **kw)
         if self._sink is not None:
             ev = InvocationStateChanged(
                 path=path, state=state, model=model, resource=resource,
-                attempt=attempt, speculative=speculative, error=error)
+                attempt=attempt, speculative=speculative, error=error,
+                memoized=memoized)
             self._emit(ev)
 
     # ------------------------------------------------------------------- run
@@ -444,7 +466,7 @@ class StreamFlowExecutor:
         # (the full input pass happens once, inside _execute)
         for token in {t for t, _, _ in state.transfers_inflight
                       if t in inputs}:
-            self.data.put_local(token, inputs[token])
+            self.data.put(token, inputs[token])
 
         pre_completed: set = set()
         pre_tokens: set = set()
@@ -501,7 +523,7 @@ class StreamFlowExecutor:
                 continue
             try:
                 self.deployment.deploy(dst_model)
-                self.data.transfer_data_async(token, dst_model, dst_resource)
+                self.data.transfer(token, dst_model, dst_resource)
             except KeyError:
                 continue        # model no longer configured: skip the replay
 
@@ -547,6 +569,134 @@ class StreamFlowExecutor:
                 continue        # resource gone from the (re)deployed site
         return None
 
+    # ----------------------------------------------------- cross-run memoization
+    def _memo_key_for(self, plan, path: str, step) -> Optional[str]:
+        """Memo key of a fireable invocation: hash(command identity,
+        resolved input digests, scatter tag).  The identity pins the
+        workflow's builder reference (module/builder/args) — step fns are
+        often closures whose qualname is identical across different
+        builder args, so the args MUST salt the key."""
+        digests: Dict[str, str] = {}
+        for slot, token in step.inputs.items():
+            d = self.data.token_digest(token)
+            if d is None:
+                return None     # input bytes unreachable: execute normally
+            digests[slot] = d
+        identity = {
+            "workflow": plan.name,
+            "builder": getattr(plan, "builder_info", None),
+            "path": path,
+            "outputs": list(step.outputs),
+        }
+        return invocation_memo_key(identity, digests,
+                                   tuple(getattr(step, "tag", ())))
+
+    def _verify_memo_output(self, meta: dict, memo_key: str
+                            ) -> Optional[Tuple[str, str, str]]:
+        """First recorded location of a cached output that still checks
+        out: site in this run's model set, answering the liveness ping,
+        and holding bytes that STILL hash to the recorded digest (the
+        in-place-mutation recheck — a mismatch invalidates the entry).
+        Returns (model, resource, store_path) or None."""
+        for model, resource, store_path in meta.get("locs", ()):
+            try:
+                conn = self.deployment.deploy(model)
+            except KeyError:
+                continue        # model not in this executor's spec set
+            if not conn.ping(resource):
+                continue
+            try:
+                digest = conn.store(resource).digest_of(store_path)
+            except KeyError:
+                continue        # resource gone from the (re)deployed site
+            if digest is None:
+                continue        # store lost the payload (fresh deploy)
+            if digest != meta.get("digest"):
+                # the bytes under the recorded path changed in place —
+                # the whole entry is untrustworthy, drop it
+                self.cache.invalidate(memo_key)
+                return None
+            return (model, resource, store_path)
+        return None
+
+    def _try_memo(self, plan, path: str, completed: set,
+                  done_tokens: set) -> bool:
+        """Satisfy a fireable invocation from the cross-run cache.  On a
+        verified hit every output is aliased (by digest, zero bytes) into
+        this run's namespace, registered, and the invocation transitions
+        straight to ``completed`` with ``memoized=True``.  Any doubt —
+        missing digest, dead site, mutated payload — returns False and the
+        invocation executes normally (the cache is an optimisation, never
+        an authority)."""
+        step = plan.steps[path]
+        memo_key = self._memo_key_for(plan, path, step)
+        if memo_key is None:
+            return False
+        entry = self.cache.lookup(memo_key)
+        if entry is None:
+            # remembered so _harvest can record this invocation's outputs
+            # under the exact key its inputs hashed to
+            self._memo_keys[path] = memo_key
+            return False
+        verified: Dict[str, Tuple[str, str, str, dict]] = {}
+        for token in step.outputs:
+            meta = entry["outputs"].get(token)
+            loc = (self._verify_memo_output(meta, memo_key)
+                   if meta is not None else None)
+            if loc is None:
+                self._memo_keys[path] = memo_key
+                return False    # partial reuse is no reuse: execute
+            verified[token] = (*loc, meta)
+        now = time.time()
+        for token, (model, resource, store_path, meta) in verified.items():
+            conn = self.deployment.get_connector(model)
+            # zero-cost CAS alias into THIS run's key: consumers read
+            # their namespaced path, and the R4 presence check now holds
+            conn.store(resource).link_digest(self._store_key(token),
+                                             meta["digest"])
+            self.data.add_remote_path_mapping(model, resource, token)
+            self.data.journal_payload(token)
+            done_tokens.add(token)
+        completed.add(path)
+        first_model, first_resource = verified[next(iter(step.outputs))][:2]
+        # WAL ordering as in _harvest: tokens are durable before the
+        # completed transition, so resume() re-verifies, never re-trusts
+        self._transition(path, "completed", model=first_model,
+                         resource=first_resource, memoized=True)
+        for token in step.outputs:
+            port, tag = parse_token_ref(token)
+            self._emit(TokenAvailable(token=token, port=port, tag=tag,
+                                      model=verified[token][0],
+                                      resource=verified[token][1]))
+        self._record(JobEvent(path, first_model, first_resource,
+                              now, time.time(), 0, "memoized"))
+        return True
+
+    def _memo_record(self, plan, path: str, model: str, resource: str):
+        """After a real execution, remember the invocation's outputs
+        (digest + size + site location) under its memo key."""
+        memo_key = self._memo_keys.pop(path, None)
+        if memo_key is None:
+            return
+        conn = self.deployment.get_connector(model)
+        if conn is None:
+            return
+        step = plan.steps[path]
+        outputs: Dict[str, dict] = {}
+        for token in step.outputs:
+            store_path = self._store_key(token)
+            try:
+                store = conn.store(resource)
+            except KeyError:
+                return
+            digest = store.digest_of(store_path)
+            if digest is None:
+                return          # output not where expected: don't memo
+            outputs[token] = {"digest": digest,
+                              "size": max(store.size(store_path), 0),
+                              "locs": [(model, resource, store_path)]}
+        self.cache.record(memo_key, path, outputs)
+
     def _execute(self, workflow, bindings: List[Binding],
                  inputs: Optional[Dict[str, Any]] = None,
                  collect: bool = True, *,
@@ -564,7 +714,7 @@ class StreamFlowExecutor:
         if missing:
             raise ValueError(f"missing workflow inputs: {sorted(missing)}")
         for token, value in inputs.items():
-            self.data.put_local(token, value)
+            self.data.put(token, value)
         if self.journal is not None:
             # a resumed run's inputs are already durable in this WAL
             # (resume() journals only overriding values)
@@ -580,6 +730,7 @@ class StreamFlowExecutor:
 
         done_tokens = set(inputs) | set(pre_tokens or ())
         completed: set = set(pre_completed or ())
+        self._memo_keys.clear()                # per-execution scratch state
         running: Dict[str, dict] = {}          # step path -> job record
         waiting: List[str] = []
         retries: List[dict] = []               # {rec, path, retry_at}
@@ -606,10 +757,17 @@ class StreamFlowExecutor:
                     step, err = next(iter(failed_final.items()))
                     raise RuntimeError(
                         f"step {step} failed after retries") from err
-                # 1. enqueue newly fireable invocations (FCFS arrival order)
+                # 1. enqueue newly fireable invocations (FCFS arrival order);
+                #    with the cross-run cache on, an invocation whose memo
+                #    entry verifies live is completed here and never queues
                 started = (list(running) + list(completed) + waiting
                            + [r["path"] for r in retries])
+                memoed = 0
                 for path in plan.fireable(done_tokens, started):
+                    if self.cache is not None and self._try_memo(
+                            plan, path, completed, done_tokens):
+                        memoed += 1
+                        continue
                     waiting.append(path)
                     self._transition(path, "fireable")
                 # 2. launch retries whose backoff deadline passed (a step
@@ -644,9 +802,13 @@ class StreamFlowExecutor:
                 for m in released:
                     self.scheduler.forget_model(m)
                     self.data.drop_model(m)
+                    if self.cache is not None:
+                        self.cache.drop_model(m)
                 # 7. progress bookkeeping: sleep on the wake event (pipelined)
                 #    or poll (serialized baseline); deadlock guard either way
-                if progressed or due:
+                #    (a memo hit is progress: its tokens may fire successors
+                #    immediately, so don't sleep on them)
+                if progressed or due or memoed:
                     starving_since = None
                     continue
                 if waiting and not running and not retries:
@@ -908,7 +1070,7 @@ class StreamFlowExecutor:
             if not targets:
                 continue
             for token in tokens:
-                self.data.transfer_data_async(token, model, targets[0])
+                self.data.transfer(token, model, targets[0])
 
     def _placement_of_model(self, resource: str) -> Optional[str]:
         alloc = self.scheduler.resources.get(resource)
@@ -942,7 +1104,7 @@ class StreamFlowExecutor:
                              speculative=speculative)
             if xfer_futs is None:
                 for token in tokens:            # serialized baseline (R3/R4)
-                    self.data.transfer_data(token, model, resource)
+                    self.data.transfer_sync(token, model, resource)
             else:
                 for f in xfer_futs:
                     f.result()                  # propagate transfer failures
@@ -991,6 +1153,8 @@ class StreamFlowExecutor:
                         model, rec["resource"], token)
                     self.data.journal_payload(token)
                     done_tokens.add(token)
+                if self.cache is not None:
+                    self._memo_record(plan, path, model, rec["resource"])
                 # WAL ordering: "completed" is written only after every
                 # output token's location (and optional payload) is durable,
                 # so a journaled-complete step always has journaled tokens
@@ -1042,6 +1206,10 @@ class StreamFlowExecutor:
             if conn is None or not conn.ping(rec["resource"]):
                 self.data.drop_model(model)
                 self.scheduler.forget_model(model)
+                if self.cache is not None:
+                    # the redeployed site comes back with empty stores:
+                    # every cached location on it is now a lie
+                    self.cache.drop_model(model)
                 self.deployment.redeploy(model)
             delay = self.fault.backoff_s * (
                 self.fault.backoff_mult ** rec["attempt"])

@@ -39,6 +39,7 @@ dropped, not fatal; corruption in the middle of the file is an error.
 from __future__ import annotations
 
 import base64
+import hashlib
 import json
 import os
 import threading
@@ -437,3 +438,201 @@ class ExecutionJournal:
             st.cancelled = True
             st.cancelled_pending = list(rec.get("pending", []))
         # unknown kinds are ignored: newer journals stay readable
+
+
+# ---------------------------------------------------------------------------
+# Cross-run invocation memoization (the ``cache:`` block)
+# ---------------------------------------------------------------------------
+
+@dataclass
+class CacheConfig:
+    """The ``cache:`` block of a StreamFlow file.
+
+    ``scope`` decides who shares the memo index: ``service`` (the default)
+    hands ONE index to every run a WorkflowService admits, so pooled
+    tenants reuse each other's work; ``per-run`` gives each executor its
+    own index at ``index_path`` (still persistent, so *re-runs* hit)."""
+    enabled: bool = True
+    index_path: str = ".streamflow/cache.jsonl"
+    scope: str = "service"              # "service" | "per-run"
+    fsync: bool = False                 # a cache may lose its tail safely
+
+    def __post_init__(self):
+        if self.scope not in ("service", "per-run"):
+            raise ValueError(
+                f"cache scope must be 'service' or 'per-run', "
+                f"not {self.scope!r}")
+
+    @classmethod
+    def from_value(cls, v: Any) -> Optional["CacheConfig"]:
+        """Normalize the StreamFlow file's ``cache:`` value.  Accepts the
+        mapping form, plain booleans (YAML ``cache: off`` parses to
+        False), or absence — anything disabled returns None, which is the
+        engine's pre-cache behaviour switch."""
+        if v is None or v is False or v == {}:
+            return None
+        if v is True:
+            return cls()
+        if not isinstance(v, dict):
+            raise ValueError(f"cache: must be a mapping or a boolean, "
+                             f"not {type(v).__name__}")
+        unknown = set(v) - set(cls.__dataclass_fields__)
+        if unknown:         # a typo'd key must not silently misconfigure
+            raise ValueError(
+                f"unknown cache key(s) {sorted(unknown)}; "
+                f"known: {sorted(cls.__dataclass_fields__)}")
+        cfg = cls(**v)
+        return cfg if cfg.enabled else None
+
+
+def invocation_memo_key(identity: dict, input_digests: Dict[str, str],
+                        tag: Tuple[int, ...] = ()) -> str:
+    """Memo key of one invocation: hash(step command identity, resolved
+    input digests, scatter tag).  ``identity`` must pin everything that
+    changes what the command computes (workflow/builder reference and
+    args, step path, output ports) — input *values* arrive as content
+    digests, so two runs feeding identical bytes hash identically however
+    the bytes got there."""
+    blob = json.dumps({"identity": identity,
+                       "inputs": dict(sorted(input_digests.items())),
+                       "tag": list(tag)},
+                      sort_keys=True, separators=(",", ":"), default=str)
+    return hashlib.sha256(blob.encode("utf-8")).hexdigest()
+
+
+class InvocationCache:
+    """Persistent cross-run invocation memo index (append-only JSONL).
+
+    Each entry maps a memo key to the invocation's output tokens — their
+    content digests, sizes and last-known site locations.  The cache is a
+    *hint*, never trusted blindly: the executor re-verifies, per reuse,
+    that a listed site still answers and that the payload at the listed
+    path still hashes to the recorded digest (in-place mutation detection)
+    before skipping an invocation.  Site death/redeploy invalidates
+    eagerly via ``drop_model``.
+
+    Record kinds: ``entry`` (add/overwrite), ``drop`` (invalidate one
+    key), ``drop_model`` (a site died — strip its locations; entries left
+    with an output that has no location anywhere are removed).  A torn or
+    unreadable tail is skipped silently — losing cache entries only costs
+    re-execution, never correctness."""
+
+    def __init__(self, path: str, *, fsync: bool = False):
+        parent = os.path.dirname(os.path.abspath(path))
+        os.makedirs(parent, exist_ok=True)
+        self.path = path
+        self.fsync = fsync
+        self._lock = threading.Lock()
+        # memo key -> {"step": path, "outputs": {ref: {"digest", "size",
+        #              "locs": [[model, resource, store_path], ...]}}}
+        self._entries: Dict[str, dict] = {}
+        self.hits = 0
+        self.misses = 0
+        self.invalidations = 0
+        ExecutionJournal._repair_torn_tail(path)
+        self._load(path)
+        self._fh = open(path, "a", encoding="utf-8")
+
+    def _load(self, path: str):
+        if not os.path.exists(path):
+            return
+        with open(path, "r", encoding="utf-8", errors="replace") as fh:
+            for line in fh:
+                line = line.strip()
+                if not line:
+                    continue
+                try:
+                    rec = json.loads(line)
+                except ValueError:
+                    continue            # stale garbage: a cache may shed it
+                if not isinstance(rec, dict):
+                    continue
+                self._apply(rec)
+
+    def _apply(self, rec: dict):
+        kind = rec.get("kind")
+        if kind == "entry" and rec.get("key"):
+            self._entries[rec["key"]] = {"step": rec.get("step", ""),
+                                         "outputs": rec.get("outputs", {})}
+        elif kind == "drop" and rec.get("key"):
+            self._entries.pop(rec["key"], None)
+        elif kind == "drop_model" and rec.get("model"):
+            self._strip_model(rec["model"])
+
+    def _strip_model(self, model: str):
+        for key in list(self._entries):
+            outputs = self._entries[key]["outputs"]
+            dead = False
+            for meta in outputs.values():
+                meta["locs"] = [l for l in meta.get("locs", [])
+                                if l[0] != model]
+                dead = dead or not meta["locs"]
+            if dead:
+                del self._entries[key]
+
+    def _append(self, rec: dict):
+        line = json.dumps({"v": 1, "t": time.time(), **rec},
+                          separators=(",", ":"))
+        if self._fh.closed:
+            return
+        self._fh.write(line + "\n")
+        self._fh.flush()
+        if self.fsync:
+            os.fsync(self._fh.fileno())
+
+    # ------------------------------------------------------------------ api
+    def lookup(self, key: str) -> Optional[dict]:
+        """The recorded outputs for a memo key, or None.  Returns a deep
+        copy — callers (and their verification failures) must not mutate
+        the index in place."""
+        with self._lock:
+            entry = self._entries.get(key)
+            if entry is None:
+                self.misses += 1
+                return None
+            self.hits += 1
+            return json.loads(json.dumps(entry))
+
+    def record(self, key: str, step: str, outputs: Dict[str, dict]):
+        """Remember an invocation's outputs: ``outputs`` maps token ref ->
+        {"digest", "size", "locs": [(model, resource, store_path), ...]}."""
+        outputs = {ref: {"digest": m["digest"], "size": m["size"],
+                         "locs": [list(l) for l in m["locs"]]}
+                   for ref, m in outputs.items()}
+        with self._lock:
+            self._entries[key] = {"step": step, "outputs": outputs}
+            self._append({"kind": "entry", "key": key, "step": step,
+                          "outputs": outputs})
+
+    def invalidate(self, key: str):
+        """Drop one entry (digest recheck failed: in-place mutation)."""
+        with self._lock:
+            if self._entries.pop(key, None) is not None:
+                self.invalidations += 1
+                self._append({"kind": "drop", "key": key})
+
+    def drop_model(self, model: str):
+        """A site died or was redeployed: its stores are gone, so every
+        location on it is a lie.  Entries that kept at least one location
+        per output survive (another site still holds the artifact)."""
+        with self._lock:
+            before = len(self._entries)
+            self._strip_model(model)
+            self.invalidations += before - len(self._entries)
+            self._append({"kind": "drop_model", "model": model})
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._entries)
+
+    def close(self):
+        with self._lock:
+            if not self._fh.closed:
+                self._fh.close()
+
+    @classmethod
+    def from_config(cls, cfg: Optional[CacheConfig]
+                    ) -> Optional["InvocationCache"]:
+        if cfg is None:
+            return None
+        return cls(cfg.index_path, fsync=cfg.fsync)

@@ -46,6 +46,7 @@ from typing import Any, Dict, List, Optional
 from repro.core.deployment import DeploymentManager, ModelSpec
 from repro.core.events import EventSink, WorkflowCancelled
 from repro.core.executor import RunResult, StreamFlowExecutor
+from repro.core.persistence import CacheConfig, InvocationCache
 from repro.core.scheduler import POLICIES, Scheduler
 from repro.core.streamflow_file import StreamFlowConfig
 
@@ -268,7 +269,7 @@ class WorkflowService:
     typically a ``WorkflowEntry``'s fields."""
 
     def __init__(self, models, *, service: Optional[ServiceConfig] = None,
-                 policy: Optional[str] = None, **executor_kw):
+                 policy: Optional[str] = None, cache=None, **executor_kw):
         if isinstance(models, StreamFlowConfig):
             cfg = models
             models = cfg.models
@@ -276,7 +277,25 @@ class WorkflowService:
                 service = ServiceConfig.from_dict(cfg.service)
             if policy is None:
                 policy = cfg.policy
+            if cache is None:
+                cache = cfg.cache or None
         self.config = service or ServiceConfig()
+        # cross-run invocation cache (the ``cache:`` block).  scope=service
+        # opens ONE shared index handed to every admitted executor, so
+        # pooled tenants reuse each other's work; scope=per-run passes the
+        # config through and each executor opens the index itself (still
+        # persistent — re-runs hit — but runs don't see entries recorded
+        # after their own admission).
+        self.cache: Optional[InvocationCache] = None
+        self._cache_cfg: Optional[CacheConfig] = None
+        if isinstance(cache, InvocationCache):
+            self.cache = cache
+        else:
+            self._cache_cfg = (cache if isinstance(cache, CacheConfig)
+                               else CacheConfig.from_value(cache))
+            if self._cache_cfg is not None \
+                    and self._cache_cfg.scope == "service":
+                self.cache = InvocationCache.from_config(self._cache_cfg)
         self._models = dict(models)
         self._policy = policy or "data_locality"
         self._executor_kw = executor_kw
@@ -364,6 +383,10 @@ class WorkflowService:
             kw["deployment"] = self.pool.lease_manager()
             kw["scheduler"] = self.scheduler
             kw["namespace"] = f"{run.id}/"
+        if self.cache is not None:
+            kw.setdefault("cache", self.cache)
+        elif self._cache_cfg is not None:
+            kw.setdefault("cache", self._cache_cfg)
         run.executor = StreamFlowExecutor(self._models, **kw)
         if run.sink is not None:
             run.stream = run.executor.run_stream(
@@ -500,3 +523,5 @@ class WorkflowService:
         self.drain(timeout)
         if self.pool is not None:
             self.pool.shutdown()
+        if self.cache is not None:
+            self.cache.close()

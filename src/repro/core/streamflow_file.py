@@ -63,6 +63,12 @@ class StreamFlowConfig:
     # per-tenant quotas/shares/priorities) and deployment-pool policy;
     # consumed by repro.core.service.WorkflowService
     service: Dict[str, Any] = field(default_factory=dict)
+    # the ``cache:`` block — cross-run invocation memoization + CAS
+    # routing (enabled/index_path/scope).  Kept as the raw YAML value:
+    # ``cache: off`` parses to False, absence to {}, both meaning
+    # disabled (the engine's exact pre-cache behaviour);
+    # persistence.CacheConfig.from_value normalizes downstream
+    cache: Any = field(default_factory=dict)
 
 
 def _check(cond: bool, msg: str):
@@ -221,6 +227,12 @@ def load(path_or_doc) -> StreamFlowConfig:
         _check(bool(ckpt["journal_path"]),
                "checkpoint.journal_path must be non-empty")
 
+    cache = doc.get("cache", {})
+    if isinstance(cache, dict) and cache.get("enabled", True) \
+            and "index_path" in cache:
+        _check(bool(cache["index_path"]),
+               "cache.index_path must be non-empty")
+
     topology = doc.get("topology", {})
     for i, link in enumerate(topology.get("links", [])):
         for end in ("source", "target"):
@@ -239,4 +251,5 @@ def load(path_or_doc) -> StreamFlowConfig:
         fault=doc.get("fault", {}),
         checkpoint=ckpt,
         topology=topology,
-        service=doc.get("service", {}))
+        service=doc.get("service", {}),
+        cache=cache)

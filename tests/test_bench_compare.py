@@ -17,7 +17,9 @@ def _bench(*, serial=1.0, piped=0.5, scratch=3.0, resumed=1.0,
            mk_unrolled=2.4, mk_scatter=2.3, scatter_sites=2,
            scatter_planned=50, scatter_done=50,
            tput_pooled=140.0, tput_perrun=100.0,
-           p99_pooled=0.03, p99_perrun=0.6):
+           p99_pooled=0.03, p99_perrun=0.6,
+           mk_cold=2.0, mk_warm=0.1, bytes_cold=1_000_000, bytes_warm=40,
+           warm_memoized=34, warm_invocations=34):
     return {"results": {
         "pipeline_makespan": [
             {"topology": "fig9", "mode": "serialized-fcfs",
@@ -50,6 +52,15 @@ def _bench(*, serial=1.0, piped=0.5, scratch=3.0, resumed=1.0,
             {"variant": "pooled", "throughput_rps": tput_pooled,
              "lat_p99_s": p99_pooled, "deploys": 2},
         ],
+        "cache_memoization": [
+            {"phase": "cold", "invocations": 34, "executed": 34,
+             "memoized": 0, "makespan_s": mk_cold,
+             "transfer_bytes": bytes_cold},
+            {"phase": "warm", "invocations": warm_invocations,
+             "executed": warm_invocations - warm_memoized,
+             "memoized": warm_memoized, "makespan_s": mk_warm,
+             "transfer_bytes": bytes_warm},
+        ],
     }}
 
 
@@ -66,6 +77,9 @@ def test_extract_metrics():
     assert m["scatter_invocations_ratio"] == pytest.approx(1.0)
     assert m["service_throughput_ratio"] == pytest.approx(1.4)
     assert m["service_p99_ratio"] == pytest.approx(0.05)
+    assert m["cache_warm_makespan_ratio"] == pytest.approx(0.05)
+    assert m["cache_bytes_ratio"] == pytest.approx(4e-05)
+    assert m["cache_hit_rate"] == pytest.approx(1.0)
 
 
 def _run(tmp_path, bench, baseline_bench=None, argv_extra=()):
@@ -139,6 +153,26 @@ def test_gate_fails_when_pooled_tail_balloons(tmp_path, capsys):
     # absorbing site bring-up (hard ceiling 0.5)
     assert _run(tmp_path, _bench(p99_pooled=0.55)) == 1
     assert "service_p99_ratio" in capsys.readouterr().out
+
+
+def test_gate_fails_when_warm_rerun_stops_hitting(tmp_path, capsys):
+    # memo keys or verification silently broke: warm run re-executes
+    assert _run(tmp_path, _bench(warm_memoized=20)) == 1
+    out = capsys.readouterr().out
+    assert "cache_hit_rate" in out and "hard bound" in out
+
+
+def test_gate_fails_when_warm_rerun_moves_bytes(tmp_path, capsys):
+    # digest aliasing broke: the warm run paid the copies again
+    assert _run(tmp_path, _bench(bytes_warm=900_000)) == 1
+    out = capsys.readouterr().out
+    assert "cache_bytes_ratio" in out and "hard bound" in out
+
+
+def test_gate_fails_when_memoization_stops_saving_time(tmp_path, capsys):
+    # warm makespan back at the cold level (hard ceiling 0.5)
+    assert _run(tmp_path, _bench(mk_warm=1.9)) == 1
+    assert "cache_warm_makespan_ratio" in capsys.readouterr().out
 
 
 def test_gate_fails_on_missing_benchmark_section(tmp_path, capsys):

@@ -1,0 +1,495 @@
+"""Content-addressed data plane + cross-run invocation memoization (PR 7):
+CAS ObjectStore semantics, the typed DataRef API and its deprecation
+shims, the digest transfer route, InvocationCache persistence and
+invalidation, warm-rerun memoization through the WorkflowService, and the
+``cache: off`` behaviour switch."""
+import json
+import os
+import threading
+import time
+
+import pytest
+
+from repro.core import (CacheConfig, DataManager, DataRef,
+                        DeploymentManager, InvocationCache, ModelSpec,
+                        ObjectStore, Requirements, ServiceConfig, Step,
+                        StreamFlowExecutor, Workflow, WorkflowService,
+                        content_digest, invocation_memo_key,
+                        load_streamflow_file, serialize)
+from repro.core.streamflow_file import Binding
+
+
+# --------------------------------------------------------------- CAS store
+def test_put_returns_content_digest_and_dedups_storage():
+    st = ObjectStore("s")
+    payload = b"x" * 1000
+    d1 = st.put("a", payload)
+    d2 = st.put("b", payload)
+    assert d1 == d2 == content_digest(payload)
+    assert st.unique_bytes() == 1000            # held once
+    assert st.dedup_puts == 1 and st.dedup_bytes == 1000
+    # logical accounting is invariant to the dedup: both puts counted
+    assert st.bytes_in == 2000
+    assert st.get("a") == payload and st.get("b") == payload
+
+
+def test_delete_shared_digest_keeps_live_second_path():
+    st = ObjectStore("s")
+    payload = b"shared-payload"
+    st.put("a", payload)
+    st.put("b", payload)
+    st.delete("a")
+    assert not st.exists("a")
+    assert st.get("b") == payload               # survives its sibling
+    assert st.unique_bytes() == len(payload)
+    st.delete("b")                              # last reference frees it
+    assert st.unique_bytes() == 0
+    assert not st.has_digest(content_digest(payload))
+
+
+def test_size_and_digest_of_absent_path():
+    st = ObjectStore("s")
+    assert st.size("nope") == -1
+    assert st.digest_of("nope") is None
+    with pytest.raises(KeyError):
+        st.get("nope")
+
+
+def test_metadata_probes_never_touch_byte_counters():
+    st = ObjectStore("s")
+    payload = b"y" * 64
+    digest = st.put("tok", payload)
+    before = (st.bytes_in, st.bytes_out)
+    assert st.exists("tok") and not st.exists("other")
+    assert st.size("tok") == 64 and st.size("other") == -1
+    assert st.digest_of("tok") == digest
+    assert st.has_digest(digest) and not st.has_digest("0" * 64)
+    assert st.link_digest("alias", digest)
+    assert (st.bytes_in, st.bytes_out) == before
+    # the alias is a real path afterwards
+    assert st.get("alias") == payload
+
+
+def test_link_digest_absent_payload_is_a_clean_no():
+    st = ObjectStore("s")
+    assert st.link_digest("alias", "deadbeef") is False
+    assert not st.exists("alias")
+
+
+def test_rebind_path_releases_old_payload():
+    st = ObjectStore("s")
+    st.put("tok", b"old-bytes")
+    st.put("tok", b"new-bytes")
+    assert st.get("tok") == b"new-bytes"
+    assert not st.has_digest(content_digest(b"old-bytes"))
+    assert st.unique_bytes() == len(b"new-bytes")
+
+
+def test_concurrent_identical_puts_hold_payload_once():
+    st = ObjectStore("s")
+    payload = b"z" * 4096
+    barrier = threading.Barrier(8)
+
+    def work(i):
+        barrier.wait()
+        st.put(f"p{i}", payload)
+
+    threads = [threading.Thread(target=work, args=(i,)) for i in range(8)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    assert st.unique_bytes() == len(payload)
+    assert st.bytes_in == 8 * len(payload)
+    for i in range(8):
+        assert st.get(f"p{i}") == payload
+    for i in range(8):                          # refcounts balance out
+        st.delete(f"p{i}")
+    assert st.unique_bytes() == 0
+
+
+# ----------------------------------------------------------- DataRef API
+def _world(content_routing=False):
+    dm = DeploymentManager({
+        "hpc": ModelSpec("hpc", "local", {
+            "services": {"x": {"replicas": 2}}}),
+        "cloud": ModelSpec("cloud", "local", {
+            "services": {"y": {"replicas": 1}}}),
+    })
+    dm.deploy("hpc")
+    dm.deploy("cloud")
+    return dm, DataManager(dm, content_routing=content_routing)
+
+
+def test_put_returns_typed_ref_and_get_roundtrips():
+    _, d = _world()
+    ref = d.put("shard[2]", {"v": 1})
+    assert isinstance(ref, DataRef)
+    assert ref.key == "shard[2]" and ref.port == "shard"
+    assert ref.tag == (2,) and ref.size > 0
+    assert ref.digest == content_digest(serialize({"v": 1}))
+    assert d.get(ref) == {"v": 1}
+    assert d.get("shard[2]") == {"v": 1}        # raw key still accepted
+    assert str(ref) == "shard[2]"
+
+
+def test_put_local_get_local_warn_but_work():
+    _, d = _world()
+    with pytest.warns(DeprecationWarning):
+        d.put_local("tok", [1, 2])
+    with pytest.warns(DeprecationWarning):
+        assert d.get_local("tok") == [1, 2]
+
+
+def test_transfer_accepts_dataref_and_sync_async_share_route():
+    _, d = _world()
+    ref = d.put("tok", b"payload")
+    rec = d.transfer_sync(ref, "hpc", "hpc/x/0")
+    assert rec.kind == "two-step" and rec.bytes > 0
+    fut = d.transfer(ref, "hpc", "hpc/x/1")
+    assert fut.result().kind == "intra-model"
+    # deprecated spellings delegate to the same implementation
+    assert d.transfer_data("tok", "hpc", "hpc/x/0").kind == "elided"
+    assert d.transfer_data_async("tok", "hpc", "hpc/x/1").result().kind \
+        == "elided"
+    d.close()
+
+
+def test_token_digest_finds_remote_only_replicas():
+    dm, d = _world()
+    d.put("tok", b"abc")
+    d.transfer_sync("tok", "hpc", "hpc/x/0")
+    d.local_store.delete("tok")
+    assert d.token_digest("tok") == content_digest(serialize(b"abc"))
+    assert d.token_digest("ghost") is None
+
+
+# ----------------------------------------------------------- digest route
+def test_digest_route_elides_when_destination_holds_payload():
+    dm, d = _world(content_routing=True)
+    d.put("first", b"same-bytes")
+    d.transfer_sync("first", "cloud", "cloud/y/0")
+    # a DIFFERENT token with identical bytes: the destination already
+    # holds the payload, so the route collapses to an index alias
+    d.put("second", b"same-bytes")
+    rec = d.transfer_sync("second", "cloud", "cloud/y/0")
+    assert rec.kind == "elided" and rec.route == "digest"
+    assert rec.bytes == 0
+    store = dm.get_connector("cloud").store("cloud/y/0")
+    assert store.exists("second")
+    # both tokens alias one stored payload
+    assert store.unique_bytes() == store.size("first")
+
+
+def test_without_content_routing_same_scenario_pays_the_copy():
+    dm, d = _world(content_routing=False)
+    d.put("first", b"same-bytes")
+    d.transfer_sync("first", "cloud", "cloud/y/0")
+    d.put("second", b"same-bytes")
+    rec = d.transfer_sync("second", "cloud", "cloud/y/0")
+    # `cache: off` keeps the pre-CAS transfer log: a real two-step copy
+    assert rec.kind == "two-step" and rec.bytes > 0
+
+
+# ----------------------------------------------------- CacheConfig / keys
+def test_cache_config_from_value_normalization():
+    assert CacheConfig.from_value(None) is None
+    assert CacheConfig.from_value(False) is None
+    assert CacheConfig.from_value({}) is None
+    assert CacheConfig.from_value({"enabled": False}) is None
+    cfg = CacheConfig.from_value(True)
+    assert cfg is not None and cfg.scope == "service"
+    cfg = CacheConfig.from_value({"index_path": "x.jsonl",
+                                  "scope": "per-run"})
+    assert cfg.index_path == "x.jsonl" and cfg.scope == "per-run"
+    with pytest.raises(ValueError):
+        CacheConfig.from_value({"index_pth": "typo.jsonl"})
+    with pytest.raises(ValueError):
+        CacheConfig.from_value("yes")
+    with pytest.raises(ValueError):
+        CacheConfig(scope="global")
+
+
+def test_memo_key_is_deterministic_and_sensitive():
+    identity = {"workflow": "w", "builder": None, "path": "/s",
+                "outputs": ["o"]}
+    k1 = invocation_memo_key(identity, {"a": "d1"}, (0,))
+    k2 = invocation_memo_key(dict(identity), {"a": "d1"}, (0,))
+    assert k1 == k2
+    assert k1 != invocation_memo_key(identity, {"a": "d2"}, (0,))
+    assert k1 != invocation_memo_key(identity, {"a": "d1"}, (1,))
+    assert k1 != invocation_memo_key({**identity, "path": "/t"},
+                                     {"a": "d1"}, (0,))
+
+
+# ------------------------------------------------- InvocationCache index
+def _outputs(model="hpc", resource="hpc/x/0", path="run-0/o"):
+    return {"o": {"digest": "d" * 8, "size": 3,
+                  "locs": [(model, resource, path)]}}
+
+
+def test_invocation_cache_persists_across_instances(tmp_path):
+    p = str(tmp_path / "cache.jsonl")
+    c = InvocationCache(p)
+    c.record("k1", "/s", _outputs())
+    c.close()
+    c2 = InvocationCache(p)
+    entry = c2.lookup("k1")
+    assert entry is not None and entry["step"] == "/s"
+    assert entry["outputs"]["o"]["locs"] == [["hpc", "hpc/x/0", "run-0/o"]]
+    assert c2.hits == 1 and len(c2) == 1
+    c2.close()
+
+
+def test_invalidate_and_drop_model_persist(tmp_path):
+    p = str(tmp_path / "cache.jsonl")
+    c = InvocationCache(p)
+    c.record("gone", "/a", _outputs())
+    c.record("kept", "/b", {"o": {"digest": "d", "size": 1,
+                                  "locs": [("hpc", "r", "p"),
+                                           ("cloud", "r2", "p2")]}})
+    c.invalidate("gone")
+    c.drop_model("hpc")
+    # "kept" survives drop_model on one site: cloud still holds it
+    kept = c.lookup("kept")
+    assert kept["outputs"]["o"]["locs"] == [["cloud", "r2", "p2"]]
+    c.close()
+    c2 = InvocationCache(p)
+    assert c2.lookup("gone") is None
+    assert c2.lookup("kept")["outputs"]["o"]["locs"] \
+        == [["cloud", "r2", "p2"]]
+    c2.close()
+
+
+def test_drop_model_removes_entries_with_no_location_left(tmp_path):
+    c = InvocationCache(str(tmp_path / "c.jsonl"))
+    c.record("k", "/s", _outputs(model="hpc"))
+    c.drop_model("hpc")
+    assert c.lookup("k") is None and len(c) == 0
+    c.close()
+
+
+def test_torn_tail_and_garbage_lines_are_shed(tmp_path):
+    p = str(tmp_path / "cache.jsonl")
+    c = InvocationCache(p)
+    c.record("k1", "/s", _outputs())
+    c.close()
+    with open(p, "a", encoding="utf-8") as fh:
+        fh.write("not json at all\n")
+        fh.write(json.dumps({"kind": "entry", "key": "k2", "step": "/t",
+                             "outputs": {}})[:20])   # torn tail
+    c2 = InvocationCache(p)
+    assert c2.lookup("k1") is not None
+    assert c2.lookup("k2") is None
+    c2.close()
+
+
+def test_lookup_returns_a_copy_not_the_index(tmp_path):
+    c = InvocationCache(str(tmp_path / "c.jsonl"))
+    c.record("k", "/s", _outputs())
+    entry = c.lookup("k")
+    entry["outputs"]["o"]["digest"] = "mutated"
+    assert c.lookup("k")["outputs"]["o"]["digest"] == "d" * 8
+    c.close()
+
+
+# -------------------------------------------- end-to-end warm-rerun reuse
+N = 4
+
+
+def _wf():
+    wf = Workflow("memo-wf")
+
+    def split(inputs, ctx):
+        return {"shard": [[int(inputs["seed"]) + i] * 8 for i in range(N)]}
+
+    def work(inputs, ctx):
+        time.sleep(0.01)
+        return {"out": sum(inputs["piece"])}
+
+    def merge(inputs, ctx):
+        return {"total": sum(inputs["outs"])}
+
+    wf.add_step(Step("/split", split, {"seed": "seed"}, ("shard",),
+                     streams={"shard": N}))
+    wf.add_step(Step("/work", work, {"piece": "shard"}, ("out",),
+                     scatter=("piece",),
+                     requirements=Requirements(cores=1)))
+    wf.add_step(Step("/merge", merge, {"outs": "out"}, ("total",),
+                     gather=("outs",)))
+    return wf
+
+
+def _svc(tmp_path, scope="service", cache=True):
+    kw = {}
+    if cache:
+        kw["cache"] = CacheConfig(
+            index_path=str(tmp_path / "cache.jsonl"), scope=scope)
+    return WorkflowService(
+        {"site": ModelSpec("site", "local",
+                           {"services": {"svc": {"replicas": 4}}})},
+        service=ServiceConfig(max_concurrent=1, pool_enabled=True,
+                              keepalive_s=60.0),
+        max_workers=8, transfer_workers=2, deadlock_timeout_s=10.0, **kw)
+
+
+BINDINGS = [Binding("/", "site", "svc")]
+
+
+def _counts(svc, rid):
+    res = svc._runs[rid].result
+    return (sum(1 for e in res.events if e.status == "completed"),
+            sum(1 for e in res.events if e.status == "memoized"),
+            res)
+
+
+def test_warm_rerun_memoizes_everything(tmp_path):
+    svc = _svc(tmp_path)
+    try:
+        r1 = svc.submit(_wf(), BINDINGS, {"seed": 3})
+        assert svc.wait(r1, timeout=60).state == "COMPLETE"
+        executed, memoized, res1 = _counts(svc, r1)
+        assert (executed, memoized) == (N + 2, 0)
+        r2 = svc.submit(_wf(), BINDINGS, {"seed": 3}, stream=True)
+        assert svc.result(r2, timeout=60).outputs == res1.outputs
+        executed, memoized, res2 = _counts(svc, r2)
+        assert (executed, memoized) == (0, N + 2)
+        # the live stream flagged the provenance
+        flagged = [e for e in svc.stream(r2)
+                   if getattr(e, "memoized", False)]
+        assert len(flagged) == N + 2
+        # a memoized run moves no input/shard bytes — only the final
+        # total's collection appears in its transfer log
+        assert {t.kind for t in res2.transfers} <= {"collect"}
+        assert svc.cache.hits >= N + 2
+    finally:
+        svc.close()
+
+
+def test_changed_input_defeats_the_memo_key(tmp_path):
+    svc = _svc(tmp_path)
+    try:
+        r1 = svc.submit(_wf(), BINDINGS, {"seed": 3})
+        svc.wait(r1, timeout=60)
+        r2 = svc.submit(_wf(), BINDINGS, {"seed": 4})
+        assert svc.wait(r2, timeout=60).state == "COMPLETE"
+        executed, memoized, res = _counts(svc, r2)
+        assert memoized == 0 and executed == N + 2
+        assert res.outputs["total"] != svc._runs[r1].result.outputs["total"]
+    finally:
+        svc.close()
+
+
+def test_in_place_mutation_is_detected_on_reuse(tmp_path):
+    svc = _svc(tmp_path)
+    try:
+        r1 = svc.submit(_wf(), BINDINGS, {"seed": 3})
+        svc.wait(r1, timeout=60)
+        truth = svc._runs[r1].result.outputs["total"]
+        # corrupt the producing run's stored /merge output in place
+        conn = svc.pool.manager.get_connector("site")
+        ev = next(e for e in svc._runs[r1].result.events
+                  if e.step == "/merge")
+        store = conn.store(ev.resource)
+        store.put(f"{r1}/total", serialize("poisoned"))
+        r2 = svc.submit(_wf(), BINDINGS, {"seed": 3})
+        assert svc.wait(r2, timeout=60).state == "COMPLETE"
+        # /merge re-executed (digest mismatch invalidated its entry) and
+        # the recomputed answer is the true one, not the poisoned bytes
+        assert svc._runs[r2].result.outputs["total"] == truth
+        memoized = sum(1 for e in svc._runs[r2].result.events
+                       if e.status == "memoized")
+        assert memoized < N + 2
+        assert svc.cache.invalidations >= 1
+    finally:
+        svc.close()
+
+
+def test_per_run_scope_still_hits_across_runs(tmp_path):
+    svc = _svc(tmp_path, scope="per-run")
+    try:
+        assert svc.cache is None            # each executor opens its own
+        r1 = svc.submit(_wf(), BINDINGS, {"seed": 3})
+        svc.wait(r1, timeout=60)
+        r2 = svc.submit(_wf(), BINDINGS, {"seed": 3})
+        assert svc.wait(r2, timeout=60).state == "COMPLETE"
+        _, memoized, _ = _counts(svc, r2)
+        assert memoized == N + 2
+    finally:
+        svc.close()
+
+
+def test_cache_off_runs_have_no_cache_machinery(tmp_path):
+    svc = _svc(tmp_path, cache=False)
+    try:
+        r1 = svc.submit(_wf(), BINDINGS, {"seed": 3})
+        assert svc.wait(r1, timeout=60).state == "COMPLETE"
+        r2 = svc.submit(_wf(), BINDINGS, {"seed": 3})
+        assert svc.wait(r2, timeout=60).state == "COMPLETE"
+        for rid in (r1, r2):
+            run = svc._runs[rid]
+            assert run.executor.cache is None
+            assert run.executor.data.content_routing is False
+            executed, memoized, res = _counts(svc, rid)
+            assert memoized == 0 and executed == N + 2
+            assert all(t.route != "digest" for t in res.transfers)
+        # identical transfer-log shape run over run: nothing elided by
+        # content, both paid the same movements
+        kinds1 = sorted(t.kind for t in svc._runs[r1].result.transfers)
+        kinds2 = sorted(t.kind for t in svc._runs[r2].result.transfers)
+        assert kinds1 == kinds2
+    finally:
+        svc.close()
+
+
+# -------------------------------------------------- config-surface wiring
+def _doc(cache_value):
+    return {
+        "version": "v1.0",
+        "models": {"site": {"type": "local",
+                            "config": {"services": {"s": {"replicas": 1}}}}},
+        "workflows": {"w": {
+            "type": "python",
+            "config": {"module": "repro.configs.paper_pipeline",
+                       "builder": "build_workflow",
+                       "args": {"n_chains": 1, "train_steps": 1,
+                                "rows_per_chain": 4, "seq_len": 8,
+                                "batch": 2, "vocab": 32, "d_model": 8}},
+            "bindings": [{"step": "/", "target": {"model": "site",
+                                                  "service": "s"}}]}},
+        "cache": cache_value,
+    }
+
+
+def test_streamflow_file_cache_off_and_dict_forms(tmp_path):
+    cfg = load_streamflow_file(_doc(False))      # YAML `cache: off`
+    assert cfg.cache is False
+    ex = StreamFlowExecutor.from_config(cfg)
+    assert ex.cache is None and ex.data.content_routing is False
+
+    cfg = load_streamflow_file(_doc(
+        {"index_path": str(tmp_path / "i.jsonl"), "scope": "per-run"}))
+    ex = StreamFlowExecutor.from_config(cfg)
+    assert ex.cache is not None
+    assert ex.data.content_routing is True
+    ex.cache.close()
+
+    with pytest.raises(Exception):
+        load_streamflow_file(_doc({"index_path": ""}))
+    with pytest.raises(Exception):
+        load_streamflow_file(_doc({"bogus_key": 1}))
+
+
+def test_executor_cache_kwarg_forms(tmp_path):
+    models = {"site": ModelSpec("site", "local",
+                                {"services": {"s": {"replicas": 1}}})}
+    ex = StreamFlowExecutor(models,
+                            cache=str(tmp_path / "by-path.jsonl"))
+    assert isinstance(ex.cache, InvocationCache)
+    ex.cache.close()
+    ex = StreamFlowExecutor(models, cache={"enabled": False})
+    assert ex.cache is None
+    shared = InvocationCache(str(tmp_path / "shared.jsonl"))
+    ex = StreamFlowExecutor(models, cache=shared)
+    assert ex.cache is shared
+    shared.close()

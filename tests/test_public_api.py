@@ -1,0 +1,125 @@
+"""Snapshot of the supported public surface of ``repro.core``.
+
+``repro.core.__all__`` IS the compatibility contract: anything listed is
+supported, anything not listed may change without notice.  This test
+pins the list so that an export added or removed without touching the
+snapshot below fails CI — export changes must be announced (update the
+snapshot in the same PR, with a changelog entry explaining the change).
+"""
+import repro.core as core
+
+# Keep sorted.  Update ONLY together with an intentional, documented
+# change to the public API.
+EXPECTED = [
+    "BackfillPolicy",
+    "Binding",
+    "CANCELED",
+    "COMPLETE",
+    "CacheConfig",
+    "CheckpointConfig",
+    "Connector",
+    "ConnectorCopyKind",
+    "DataLocalityPolicy",
+    "DataManager",
+    "DataRef",
+    "DeploymentManager",
+    "DeploymentPool",
+    "DurationTracker",
+    "EXECUTOR_ERROR",
+    "EventSink",
+    "EventStream",
+    "ExecutionJournal",
+    "FaultConfig",
+    "Invocation",
+    "InvocationCache",
+    "InvocationPlan",
+    "InvocationStateChanged",
+    "JobAllocation",
+    "JobDescription",
+    "JobEvent",
+    "JobStatus",
+    "JournalError",
+    "JournalState",
+    "LinkSpec",
+    "LoadBalancePolicy",
+    "LocalConnector",
+    "LocalityBatchPolicy",
+    "MANAGEMENT",
+    "MeshConnector",
+    "ModelSpec",
+    "MultiPodConnector",
+    "ObjectStore",
+    "POLICIES",
+    "Policy",
+    "PooledDeploymentManager",
+    "Port",
+    "QUEUED",
+    "RUNNING",
+    "Requirements",
+    "ResourceAllocation",
+    "RoundRobinPolicy",
+    "Route",
+    "RoutePlan",
+    "Run",
+    "RunCancelled",
+    "RunInfo",
+    "RunResult",
+    "ScatterSpreadPolicy",
+    "Scheduler",
+    "ServiceConfig",
+    "ServiceError",
+    "SimClusterConnector",
+    "Step",
+    "StreamFlowConfig",
+    "StreamFlowExecutor",
+    "StreamFlowFileError",
+    "TERMINAL_EVENTS",
+    "TERMINAL_STATES",
+    "TenantPolicy",
+    "Token",
+    "TokenAvailable",
+    "TopologyGraph",
+    "TransferRecord",
+    "TransferRouted",
+    "UnknownRunError",
+    "WidestFirstPolicy",
+    "Workflow",
+    "WorkflowCancelled",
+    "WorkflowCompleted",
+    "WorkflowEvent",
+    "WorkflowFailed",
+    "WorkflowService",
+    "WorkflowStarted",
+    "content_digest",
+    "deserialize",
+    "get_external_site",
+    "invocation_base",
+    "invocation_memo_key",
+    "load_streamflow_file",
+    "make_connector",
+    "match_binding",
+    "parse_token_ref",
+    "serialize",
+    "start_external_site",
+    "stop_external_site",
+    "token_ref",
+    "validate",
+]
+
+
+def test_public_api_snapshot():
+    actual = sorted(core.__all__)
+    added = sorted(set(actual) - set(EXPECTED))
+    removed = sorted(set(EXPECTED) - set(actual))
+    assert (added, removed) == ([], []), (
+        f"repro.core.__all__ drifted from the announced public API.\n"
+        f"  unannounced additions: {added}\n"
+        f"  unannounced removals:  {removed}\n"
+        f"If intentional, update EXPECTED in {__file__} in the same PR.")
+    # __all__ itself must stay duplicate-free
+    assert len(core.__all__) == len(set(core.__all__))
+
+
+def test_every_announced_name_resolves():
+    missing = [n for n in EXPECTED if not hasattr(core, n)]
+    assert missing == [], f"__all__ names that do not resolve: {missing}"
