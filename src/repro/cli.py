@@ -1,0 +1,65 @@
+"""StreamFlow-style command line.
+
+``python -m repro.cli check <file> [--plan]`` loads a StreamFlow file,
+runs the static checker (forced on, regardless of the document's
+``check:`` key) and dry-runs every workflow to its invocation plan —
+without deploying or executing anything.  Exit 0 on a clean document,
+exit 1 with one tab-separated ``CODE<TAB>location<TAB>message`` line per
+diagnostic on stdout otherwise, so shell pipelines and CI can grep the
+output by code.
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from typing import Optional
+
+
+def _cmd_check(args) -> int:
+    from repro.core.checker import WorkflowCheckError
+    from repro.core.streamflow_file import StreamFlowFileError, load
+    try:
+        cfg = load(args.file, check=True)
+    except WorkflowCheckError as e:
+        for d in e.diagnostics:
+            print(f"{d.code}\t{d.location}\t{d.message}")
+        print(f"FAIL: {args.file}: {len(e.diagnostics)} diagnostic(s)")
+        return 1
+    except (StreamFlowFileError, OSError) as e:
+        print(f"SCHEMA\t$\t{e}")
+        print(f"FAIL: {args.file}: not loadable")
+        return 1
+
+    from repro.core.checker import dry_run
+    plans = {name: dry_run(entry) for name, entry in cfg.workflows.items()}
+    if args.plan:
+        json.dump(plans, sys.stdout, indent=2, sort_keys=True)
+        print()
+    n_inv = sum(len(p["invocations"]) for p in plans.values())
+    print(f"OK: {args.file}: {len(plans)} workflow(s), "
+          f"{n_inv} invocation(s), 0 diagnostics")
+    return 0
+
+
+def main(argv: Optional[list] = None) -> int:
+    parser = argparse.ArgumentParser(
+        prog="streamflow",
+        description="StreamFlow file tooling (repro reimplementation)")
+    sub = parser.add_subparsers(dest="command", required=True)
+    check = sub.add_parser(
+        "check",
+        help="statically check a StreamFlow file and dry-run its plans")
+    check.add_argument("file", help="path to the StreamFlow YAML file")
+    check.add_argument("--plan", action="store_true",
+                       help="print every workflow's invocation plan "
+                            "(JSON) before the verdict")
+    args = parser.parse_args(argv)
+    if args.command == "check":
+        return _cmd_check(args)
+    parser.error(f"unknown command {args.command!r}")
+    return 2
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -310,6 +310,78 @@ def build_scatter_workflow(n_samples: int = 32, rows_per_sample: int = 12,
 
 
 # ---------------------------------------------------------------------------
+# Tool implementation factories for the declarative frontend (tools: block,
+# implementation: {module: repro.configs.paper_pipeline, factory: ...}).
+# Each returns an (inputs, ctx) -> outputs callable whose output keys are the
+# TOOL's declared output names — the frontend remaps them to ports per the
+# step's out: block, which is how one `count` tool serves every chain.
+# ---------------------------------------------------------------------------
+
+def mkfastq_tool(n_samples: int = 32, rows_per_sample: int = 12,
+                 seq_len: int = 64, vocab: int = 256):
+    """Stream splitter: emits the ``shard`` stream (scatter variant)."""
+    return _split_stream_fn(n_samples, rows_per_sample, seq_len, vocab)
+
+
+def count_tool(train_steps: int = 2, batch: int = 4, vocab: int = 256,
+               d_model: int = 48):
+    """Per-shard trainer keyed by the scatter tag (scatter variant)."""
+    return _count_stream_fn(tiny_lm(vocab=vocab, d_model=d_model),
+                            train_steps, batch)
+
+
+def seurat_tool(vocab: int = 256, d_model: int = 48, n_clusters: int = 4):
+    return _seurat_stream_fn(tiny_lm(vocab=vocab, d_model=d_model),
+                             n_clusters)
+
+
+def singler_tool(n_types: int = 6):
+    return _singler_stream_fn(n_types)
+
+
+def aggregate_tool():
+    return _aggregate_fn()
+
+
+def mkfastq_chains_tool(n_chains: int = 6, rows_per_chain: int = 32,
+                        seq_len: int = 128, vocab: int = 512):
+    """Scalar-variant splitter: one ``shard<i>`` output per chain (the
+    tool's outputs block must list them explicitly)."""
+    return _split_fn(n_chains, rows_per_chain, seq_len, vocab)
+
+
+def count_chain_tool(chain: int = 0, train_steps: int = 6, batch: int = 8,
+                     vocab: int = 512, d_model: int = 64):
+    """Scalar-variant trainer: the chain index arrives as a step-level
+    ``args: {chain: i}`` override instead of a scatter tag."""
+    inner = _count_fn(chain, tiny_lm(vocab=vocab, d_model=d_model),
+                      train_steps, batch)
+
+    def fn(inputs: Dict, ctx) -> Dict:
+        out = inner(inputs, ctx)
+        return {"model": out[f"model{chain}"], "stats": out[f"stats{chain}"]}
+    return fn
+
+
+def seurat_chain_tool(chain: int = 0, vocab: int = 512, d_model: int = 64,
+                      n_clusters: int = 4):
+    inner = _seurat_fn(chain, tiny_lm(vocab=vocab, d_model=d_model),
+                       n_clusters)
+
+    def fn(inputs: Dict, ctx) -> Dict:
+        return {"clusters": inner(inputs, ctx)[f"clusters{chain}"]}
+    return fn
+
+
+def singler_chain_tool(chain: int = 0, n_types: int = 6):
+    inner = _singler_fn(chain, n_types)
+
+    def fn(inputs: Dict, ctx) -> Dict:
+        return {"labels": inner(inputs, ctx)[f"labels{chain}"]}
+    return fn
+
+
+# ---------------------------------------------------------------------------
 # Ready-made StreamFlow documents for the paper's two experiments
 # ---------------------------------------------------------------------------
 
@@ -434,6 +506,200 @@ def streamflow_doc_scatter_hybrid(n_samples: int = 32,
             "links": [{"source": "occam", "target": "garr_cloud",
                        "latency_s": 0.005, "bandwidth_mbps": 2000}],
         },
+    }
+
+
+def streamflow_doc_declarative_hybrid(n_samples: int = 32,
+                                      hpc_replicas: int = 8,
+                                      cloud_replicas: int = 8,
+                                      policy: str = "data_locality",
+                                      rows_per_sample: int = 12,
+                                      seq_len: int = 64,
+                                      train_steps: int = 2,
+                                      batch: int = 4, vocab: int = 256,
+                                      d_model: int = 48) -> dict:
+    """``streamflow_doc_scatter_hybrid``'s workload with NO Python
+    builder: the §5 pipeline expressed purely through ``tools:`` and
+    ``steps:``.  Compiles plan-identical to ``build_scatter_workflow``
+    (the conformance suite asserts it), which makes the two documents
+    interchangeable for every downstream layer."""
+    lm = {"vocab": vocab, "d_model": d_model}
+    impl = "repro.configs.paper_pipeline"
+    return {
+        "version": "v1.0",
+        "models": {
+            "occam": {"type": "mesh", "config": {
+                "topology": {"data": 16, "model": 16},
+                "shared_store": True,
+                "services": {"cellranger": {"replicas": hpc_replicas,
+                                            "cores": 2, "memory_gb": 8}}}},
+            "garr_cloud": {"type": "local", "config": {
+                "services": {"r_env": {"replicas": cloud_replicas,
+                                       "cores": 1, "memory_gb": 4}}}},
+        },
+        "tools": {
+            "mkfastq": {
+                "command": "cellranger mkfastq --seed {seed}",
+                "inputs": {"seed": "int"},
+                "outputs": {"shard": "record"},
+                "requirements": {"cores": 1, "memory_gb": 1},
+                "implementation": {
+                    "module": impl, "factory": "mkfastq_tool",
+                    "args": {"n_samples": n_samples,
+                             "rows_per_sample": rows_per_sample,
+                             "seq_len": seq_len, "vocab": vocab}}},
+            "count": {
+                "command": "cellranger count --fastq {shard}",
+                "inputs": {"shard": "record"},
+                "outputs": {"model": "record", "stats": "record"},
+                "requirements": {"cores": 1, "memory_gb": 2},
+                "implementation": {
+                    "module": impl, "factory": "count_tool",
+                    "args": {"train_steps": train_steps, "batch": batch,
+                             **lm}}},
+            "seurat": {
+                "command": "Rscript seurat.R {shard} {model}",
+                "inputs": {"shard": "record", "model": "record"},
+                "outputs": {"clusters": "record"},
+                "requirements": {"cores": 1, "memory_gb": 2},
+                "implementation": {
+                    "module": impl, "factory": "seurat_tool", "args": lm}},
+            "singler": {
+                "command": "Rscript singler.R {clusters}",
+                "inputs": {"clusters": "record"},
+                "outputs": {"labels": "record"},
+                "requirements": {"cores": 1, "memory_gb": 1},
+                "implementation": {
+                    "module": impl, "factory": "singler_tool"}},
+            "aggregate": {
+                "inputs": {"labels": "array<record>"},
+                "outputs": {"summary": "record"},
+                "requirements": {"cores": 1, "memory_gb": 1},
+                "implementation": {
+                    "module": impl, "factory": "aggregate_tool"}},
+        },
+        "workflows": {
+            "single-cell-scatter": {
+                "type": "declarative",
+                "inputs": {"seed": "int"},
+                "steps": {
+                    "/mkfastq": {"tool": "mkfastq", "in": {"seed": "seed"},
+                                 "streams": {"shard": n_samples}},
+                    "/count": {"tool": "count", "in": {"shard": "shard"},
+                               "scatter": ["shard"]},
+                    "/seurat": {"tool": "seurat",
+                                "in": {"shard": "shard", "model": "model"},
+                                "scatter": ["shard", "model"]},
+                    "/singler": {"tool": "singler",
+                                 "in": {"clusters": "clusters"},
+                                 "scatter": ["clusters"]},
+                    "/aggregate": {"tool": "aggregate",
+                                   "in": {"labels": "labels"},
+                                   "gather": ["labels"]},
+                },
+                "bindings": [
+                    {"step": "/mkfastq",
+                     "target": {"model": "occam", "service": "cellranger"}},
+                    {"step": "/count", "targets": [
+                        {"model": "occam", "service": "cellranger"},
+                        {"model": "garr_cloud", "service": "r_env"}]},
+                    {"step": "/",
+                     "target": {"model": "garr_cloud",
+                                "service": "r_env"}},
+                ],
+            }
+        },
+        "scheduling": {"policy": policy},
+        "topology": {
+            "routing": "direct",
+            "management": {"latency_s": 0.05, "bandwidth_mbps": 200},
+            "links": [{"source": "occam", "target": "garr_cloud",
+                       "latency_s": 0.005, "bandwidth_mbps": 2000}],
+        },
+    }
+
+
+def streamflow_doc_declarative_chains(n_chains: int = 6,
+                                      rows_per_chain: int = 32,
+                                      seq_len: int = 128,
+                                      train_steps: int = 6, batch: int = 8,
+                                      vocab: int = 512,
+                                      d_model: int = 64) -> dict:
+    """The hand-unrolled scalar pipeline (``build_workflow``) expressed
+    declaratively: one chain-parameterised tool per stage, one step per
+    chain with ``args: {chain: i}`` and ``out:`` port renames."""
+    lm = {"vocab": vocab, "d_model": d_model}
+    impl = "repro.configs.paper_pipeline"
+    steps = {
+        "/mkfastq": {
+            "tool": "mkfastq_chains", "in": {"seed": "seed"},
+            "out": {f"shard{i}": f"shard{i}" for i in range(n_chains)}},
+    }
+    for i in range(n_chains):
+        steps[f"/chains/{i}/count"] = {
+            "tool": "count_chain", "in": {"shard": f"shard{i}"},
+            "out": {"model": f"model{i}", "stats": f"stats{i}"},
+            "args": {"chain": i}}
+        steps[f"/chains/{i}/seurat"] = {
+            "tool": "seurat_chain",
+            "in": {"shard": f"shard{i}", "model": f"model{i}"},
+            "out": {"clusters": f"clusters{i}"}, "args": {"chain": i}}
+        steps[f"/chains/{i}/singler"] = {
+            "tool": "singler_chain", "in": {"clusters": f"clusters{i}"},
+            "out": {"labels": f"labels{i}"}, "args": {"chain": i}}
+    return {
+        "version": "v1.0",
+        "models": {
+            "pool": {"type": "local", "config": {
+                "shared_store": False,
+                "services": {"node": {"replicas": n_chains, "cores": 2,
+                                      "memory_gb": 8}}}},
+        },
+        "tools": {
+            "mkfastq_chains": {
+                "inputs": {"seed": "int"},
+                "outputs": {f"shard{i}": "record"
+                            for i in range(n_chains)},
+                "requirements": {"cores": 1, "memory_gb": 1},
+                "implementation": {
+                    "module": impl, "factory": "mkfastq_chains_tool",
+                    "args": {"n_chains": n_chains,
+                             "rows_per_chain": rows_per_chain,
+                             "seq_len": seq_len, "vocab": vocab}}},
+            "count_chain": {
+                "inputs": {"shard": "record"},
+                "outputs": {"model": "record", "stats": "record"},
+                "requirements": {"cores": 1, "memory_gb": 2},
+                "implementation": {
+                    "module": impl, "factory": "count_chain_tool",
+                    "args": {"train_steps": train_steps, "batch": batch,
+                             **lm}}},
+            "seurat_chain": {
+                "inputs": {"shard": "record", "model": "record"},
+                "outputs": {"clusters": "record"},
+                "requirements": {"cores": 1, "memory_gb": 2},
+                "implementation": {
+                    "module": impl, "factory": "seurat_chain_tool",
+                    "args": lm}},
+            "singler_chain": {
+                "inputs": {"clusters": "record"},
+                "outputs": {"labels": "record"},
+                "requirements": {"cores": 1, "memory_gb": 1},
+                "implementation": {
+                    "module": impl, "factory": "singler_chain_tool"}},
+        },
+        "workflows": {
+            "single-cell": {
+                "type": "declarative",
+                "inputs": {"seed": "int"},
+                "steps": steps,
+                "bindings": [
+                    {"step": "/",
+                     "target": {"model": "pool", "service": "node"}},
+                ],
+            }
+        },
+        "scheduling": {"policy": "data_locality"},
     }
 
 

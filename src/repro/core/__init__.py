@@ -31,6 +31,10 @@ from repro.core.topology import (LinkSpec, MANAGEMENT, Route,
 from repro.core.streamflow_file import (load as load_streamflow_file,
                                         StreamFlowConfig, Binding,
                                         StreamFlowFileError, validate)
+from repro.core.checker import (CODES as CHECKER_CODES, Diagnostic,
+                                WorkflowCheckError, dry_run)
+from repro.core.frontend import (ToolInput, ToolSpec, compile_declarative,
+                                 parse_tools)
 from repro.core.executor import StreamFlowExecutor, RunResult, JobEvent
 from repro.core.fault import FaultConfig, DurationTracker
 from repro.core.persistence import (CacheConfig, CheckpointConfig,
@@ -75,6 +79,9 @@ __all__ = [
     # config loading
     "load_streamflow_file", "StreamFlowConfig", "Binding",
     "StreamFlowFileError", "validate",
+    # declarative frontend + static checker
+    "CHECKER_CODES", "Diagnostic", "WorkflowCheckError", "dry_run",
+    "ToolInput", "ToolSpec", "compile_declarative", "parse_tools",
     # execution
     "StreamFlowExecutor", "RunResult", "JobEvent",
     "FaultConfig", "DurationTracker",

@@ -49,6 +49,7 @@ from repro.core.executor import RunResult, StreamFlowExecutor
 from repro.core.persistence import CacheConfig, InvocationCache
 from repro.core.scheduler import POLICIES, Scheduler
 from repro.core.streamflow_file import StreamFlowConfig
+from repro.core.streamflow_file import load as load_streamflow_file
 
 # TES task states (GA4GH Task Execution Service)
 QUEUED = "QUEUED"
@@ -339,6 +340,42 @@ class WorkflowService:
             self._runs[rid] = run
             self._pump_locked()
         return rid
+
+    def submit_document(self, doc, *, workflow: Optional[str] = None,
+                        inputs=None, **submit_kw) -> str:
+        """Load, statically check and submit a StreamFlow document.
+
+        Checking is forced on regardless of the document's ``check:``
+        key: a failing document raises
+        :class:`~repro.core.checker.WorkflowCheckError` (typed; carries
+        every diagnostic) *before* a Run exists or admission state is
+        touched, so a bad document can never occupy a fair-share slot.
+        The document's bindings must also resolve against the models
+        this service deploys — a document checked against its own
+        ``models:`` block but pointed at a service lacking them raises
+        :class:`ServiceError`.  ``workflow`` selects among multiple
+        workflows in the document (optional when there is exactly one).
+        """
+        cfg = load_streamflow_file(doc, check=True)
+        if workflow is None:
+            if len(cfg.workflows) != 1:
+                raise ServiceError(
+                    f"document declares workflows {sorted(cfg.workflows)};"
+                    f" pass workflow=<name> to pick one")
+            workflow = next(iter(cfg.workflows))
+        entry = cfg.workflows.get(workflow)
+        if entry is None:
+            raise ServiceError(
+                f"document has no workflow {workflow!r} "
+                f"(have {sorted(cfg.workflows)})")
+        missing = sorted({m for b in entry.bindings
+                          for m, _svc in b.targets} - set(self._models))
+        if missing:
+            raise ServiceError(
+                f"workflow {workflow!r} binds model(s) {missing} that this "
+                f"service does not deploy (have {sorted(self._models)})")
+        return self.submit(entry.workflow, entry.bindings, inputs,
+                           **submit_kw)
 
     # -- admission (fair share + priority + quotas) ---------------------------
     def _pump_locked(self):

@@ -3,7 +3,13 @@ workflows to execution environments.
 
 ``config_schema.json`` next to this module is the authoritative format
 description and is enforced here by a small dependency-free validator
-(same role as the paper's JSON-Schema validation pass).
+(same role as the paper's JSON-Schema validation pass).  After the
+schema pass, the static checker (``repro.core.checker``) analyses the
+compiled graphs, bindings and models and raises one
+:class:`~repro.core.checker.WorkflowCheckError` carrying *every*
+diagnostic; ``check: off`` (or ``load(..., check=False)``) skips the
+pass and preserves the historical lazy-failure behaviour, where the same
+mistakes surface eagerly one at a time or mid-run.
 """
 from __future__ import annotations
 
@@ -16,14 +22,15 @@ from typing import Any, Dict, List, Optional, Tuple
 
 import yaml
 
+from repro.core import checker as _checker
+from repro.core import frontend as _frontend
+# historical home of this exception is here; checker defines it to avoid
+# an import cycle (see its docstring)
+from repro.core.checker import StreamFlowFileError, WorkflowCheckError
 from repro.core.deployment import ModelSpec
 from repro.core.workflow import Workflow
 
 _SCHEMA_PATH = os.path.join(os.path.dirname(__file__), "config_schema.json")
-
-
-class StreamFlowFileError(ValueError):
-    pass
 
 
 @dataclass
@@ -69,6 +76,9 @@ class StreamFlowConfig:
     # disabled (the engine's exact pre-cache behaviour);
     # persistence.CacheConfig.from_value normalizes downstream
     cache: Any = field(default_factory=dict)
+    # parsed ``tools:`` block (declarative frontend) — kept for
+    # introspection; workflows already compiled against it
+    tools: Dict[str, Any] = field(default_factory=dict)
 
 
 def _check(cond: bool, msg: str):
@@ -107,8 +117,12 @@ def _validate_against_schema(doc: dict, schema: dict, path: str = "$"):
                f"{path}: needs at least {schema['minItems']} item(s), "
                f"got {len(doc)}")
     if isinstance(doc, dict):
+        # report the *full* JSON path of the offending key, not just the
+        # enclosing object — nested failures under scatter:/targets: used
+        # to name only the leaf object
         for req in schema.get("required", []):
-            _check(req in doc, f"{path}: missing required key {req!r}")
+            _check(req in doc,
+                   f"{path}.{req}: missing required key {req!r}")
         props = schema.get("properties", {})
         addl = schema.get("additionalProperties", True)
         for k, v in doc.items():
@@ -117,7 +131,8 @@ def _validate_against_schema(doc: dict, schema: dict, path: str = "$"):
             elif isinstance(addl, dict):
                 _validate_against_schema(v, addl, f"{path}.{k}")
             elif addl is False:
-                raise StreamFlowFileError(f"{path}: unexpected key {k!r}")
+                raise StreamFlowFileError(
+                    f"{path}.{k}: unexpected key {k!r}")
     if isinstance(doc, list) and "items" in schema:
         for i, v in enumerate(doc):
             _validate_against_schema(v, schema["items"], f"{path}[{i}]")
@@ -181,8 +196,97 @@ def _apply_scatter_block(name: str, wf: Workflow, entries: List[dict]):
                 f"workflow {name}: scatter block does not expand: {e}")
 
 
-def load(path_or_doc) -> StreamFlowConfig:
-    """Load + validate a StreamFlow file (path, YAML string, or dict)."""
+def _apply_scatter_block_collect(name: str, wf: Workflow,
+                                 entries: List[dict], report):
+    """Checker-mode twin of :func:`_apply_scatter_block`: every problem
+    becomes a diagnostic (same messages), valid slots still merge, and
+    the eager re-expand is skipped — ``checker.check_graph`` reports the
+    merged geometry instead."""
+    loc = f"workflows.{name}"
+    for i, entry in enumerate(entries):
+        eloc = f"{loc}.scatter[{i}]"
+        step = wf.steps.get(entry["step"])
+        if step is None:
+            report("SF220", eloc,
+                   f"workflow {name}: scatter[{i}] names unknown step "
+                   f"{entry['step']!r}")
+            continue
+        for key, attr in (("over", "scatter"), ("gather", "gather")):
+            good = []
+            for slot in entry.get(key, []):
+                if slot not in step.inputs:
+                    report("SF221", eloc,
+                           f"workflow {name}: scatter[{i}] ({step.path}): "
+                           f"no input slot {slot!r} "
+                           f"(have {sorted(step.inputs)})")
+                else:
+                    good.append(slot)
+            if good:
+                setattr(step, attr,
+                        tuple(dict.fromkeys((*getattr(step, attr), *good))))
+        overlap = sorted(set(step.scatter) & set(step.gather))
+        if overlap:
+            report("SF134", eloc,
+                   f"workflow {name}: scatter[{i}] ({step.path}): slots "
+                   f"{overlap} cannot both scatter and gather")
+            step.gather = tuple(g for g in step.gather
+                                if g not in overlap)
+
+
+def _build_bindings_eager(models: Dict[str, ModelSpec],
+                          raw: List[dict]) -> List[Binding]:
+    """The historical (``check: off``) binding pass: raise on the first
+    malformed entry or unknown model."""
+    bindings = []
+    for b in raw:
+        _check("target" in b or "targets" in b,
+               f"binding {b['step']}: needs a target (or targets)")
+        _check(not ("target" in b and "targets" in b),
+               f"binding {b['step']}: give target OR targets, "
+               f"not both (ambiguous)")
+        tgts = b.get("targets") or [b["target"]]
+        for tgt in tgts:
+            _check(tgt["model"] in models,
+                   f"binding {b['step']}: unknown model {tgt['model']!r}")
+        bindings.append(Binding(
+            b["step"], tgts[0]["model"], tgts[0]["service"],
+            tuple((t["model"], t["service"]) for t in tgts[1:])))
+    return bindings
+
+
+def _build_bindings_lenient(raw: List[dict]) -> List[Binding]:
+    """Checker-mode binding construction: skip entries the checker
+    already reported as malformed (load fails before they could be
+    used), build the rest."""
+    bindings = []
+    for b in raw:
+        if ("target" in b) == ("targets" in b):
+            continue                             # SF200 reported
+        tgts = b.get("targets") or [b["target"]]
+        bindings.append(Binding(
+            b["step"], tgts[0]["model"], tgts[0]["service"],
+            tuple((t["model"], t["service"]) for t in tgts[1:])))
+    return bindings
+
+
+def check_enabled(doc: dict, override: Optional[bool] = None) -> bool:
+    """Whether the static checker runs for this document: the
+    ``load(check=...)`` override wins, then the document's ``check:``
+    key (YAML ``off`` parses to False), defaulting to on."""
+    if override is not None:
+        return bool(override)
+    return bool(doc.get("check", True))
+
+
+def load(path_or_doc, *, check: Optional[bool] = None) -> StreamFlowConfig:
+    """Load + validate a StreamFlow file (path, YAML string, or dict).
+
+    With checking enabled (the default), every workflow — Python-built
+    or declarative — passes through the static checker and *all*
+    diagnostics are raised together as
+    :class:`~repro.core.checker.WorkflowCheckError`; with ``check: off``
+    the loader keeps its historical eager/lazy failure behaviour.
+    """
     if isinstance(path_or_doc, dict):
         doc = path_or_doc
     elif os.path.exists(str(path_or_doc)):
@@ -191,35 +295,57 @@ def load(path_or_doc) -> StreamFlowConfig:
     else:
         doc = yaml.safe_load(path_or_doc)
     validate(doc)
+    checking = check_enabled(doc, check)
+    collector = _checker.Collector()
 
     models = {name: ModelSpec(name, m["type"], m.get("config", {}),
                               m.get("external", False))
               for name, m in doc["models"].items()}
 
+    tools = _frontend.parse_tools(doc.get("tools"))
+    if checking:
+        _frontend.check_tools(tools, collector)
+
     workflows: Dict[str, WorkflowEntry] = {}
     for name, w in doc["workflows"].items():
-        bindings = []
-        for b in w["bindings"]:
-            _check("target" in b or "targets" in b,
-                   f"binding {b['step']}: needs a target (or targets)")
-            _check(not ("target" in b and "targets" in b),
-                   f"binding {b['step']}: give target OR targets, "
-                   f"not both (ambiguous)")
-            tgts = b.get("targets") or [b["target"]]
-            for tgt in tgts:
-                _check(tgt["model"] in models,
-                       f"binding {b['step']}: unknown model {tgt['model']!r}")
-            bindings.append(Binding(
-                b["step"], tgts[0]["model"], tgts[0]["service"],
-                tuple((t["model"], t["service"]) for t in tgts[1:])))
-        wf = _build_workflow(name, w["config"])
-        _apply_scatter_block(name, wf, w.get("scatter", []))
-        if w.get("scatter"):
-            # the journaled builder reference must reproduce the *scattered*
-            # workflow, or a journal-only resume would rebuild the scalar
-            # plan and fail the structure check — record the block so
-            # JournalState.build_workflow re-applies it
-            wf.builder_info["scatter"] = w["scatter"]
+        wtype = w.get("type", "python")
+        if wtype == "python":
+            _check("config" in w,
+                   f"workflow {name}: python workflows need a config block")
+            wf = _build_workflow(name, w["config"])
+        else:
+            _check("steps" in w,
+                   f"workflow {name}: declarative workflows need a "
+                   f"steps block")
+            wf = _frontend.compile_declarative(
+                name, w, tools, collect=collector if checking else None)
+            # journal-resume reference: recompile from the same document
+            # fragments (JSON-serialisable, so the journal can record it)
+            wf.builder_info = {
+                "module": "repro.core.frontend",
+                "builder": "rebuild_declarative",
+                "args": {"name": name,
+                         "workflow": {k: w[k] for k in ("inputs", "steps")
+                                      if k in w},
+                         "tools": doc.get("tools") or {}}}
+        entries = w.get("scatter", [])
+        if checking:
+            _apply_scatter_block_collect(name, wf, entries, collector)
+        else:
+            _apply_scatter_block(name, wf, entries)
+        if entries:
+            # the journaled builder reference must reproduce the
+            # *scattered* workflow, or a journal-only resume would rebuild
+            # the scalar plan and fail the structure check — record the
+            # block so JournalState.build_workflow re-applies it
+            wf.builder_info["scatter"] = entries
+        if checking:
+            _checker.check_bindings(name, wf, w["bindings"], models,
+                                    collector)
+            _checker.check_graph(wf, name, collector)
+            bindings = _build_bindings_lenient(w["bindings"])
+        else:
+            bindings = _build_bindings_eager(models, w["bindings"])
         workflows[name] = WorkflowEntry(name, wf, bindings)
 
     ckpt = doc.get("checkpoint", {})
@@ -243,6 +369,9 @@ def load(path_or_doc) -> StreamFlowConfig:
                f"topology.links[{i}]: source == target "
                f"({link['source']!r}); intra-model moves are always LAN")
 
+    if checking and collector.diagnostics:
+        raise WorkflowCheckError(collector.diagnostics)
+
     sched = doc.get("scheduling", {})
     return StreamFlowConfig(
         models=models, workflows=workflows,
@@ -252,4 +381,5 @@ def load(path_or_doc) -> StreamFlowConfig:
         checkpoint=ckpt,
         topology=topology,
         service=doc.get("service", {}),
-        cache=cache)
+        cache=cache,
+        tools=tools)

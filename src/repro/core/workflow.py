@@ -153,9 +153,10 @@ class Step:
             if port not in self.outputs:
                 raise ValueError(f"{self.path}: stream {port!r} is not an "
                                  f"output port")
-            if not isinstance(width, int) or width < 1:
+            if not isinstance(width, int) or isinstance(width, bool) \
+                    or width < 0:
                 raise ValueError(f"{self.path}: stream {port!r} width must "
-                                 f"be a positive int, got {width!r}")
+                                 f"be a positive int or 0, got {width!r}")
 
 
 class Workflow:
@@ -205,11 +206,14 @@ class Workflow:
 
     # -- validation ---------------------------------------------------------
 
-    def validate(self):
-        """Raises on cycles or dangling workflow-internal references.
+    def find_cycle(self) -> Optional[List[str]]:
+        """First dependency cycle found, as the step-path trail that closes
+        it (``[.., a, b, a]``), or None for a DAG.
 
         Iterative (explicit stack): scatter produces graphs ~1k deep/wide,
-        far past CPython's default recursion limit.
+        far past CPython's default recursion limit.  The static checker
+        calls this directly to report cycles as diagnostics instead of
+        exceptions; :meth:`validate` raises on the same trail.
         """
         state: Dict[str, int] = {}               # 1 = on stack, 2 = done
         for root in self.steps:
@@ -226,9 +230,7 @@ class Workflow:
                     if mark == 2:
                         continue
                     if mark == 1:
-                        raise ValueError(
-                            f"cycle through {q}: "
-                            f"{' -> '.join(trail + [q])}")
+                        return trail + [q]
                     state[q] = 1
                     trail.append(q)
                     stack.append((q, iter(self.predecessors(q))))
@@ -238,6 +240,14 @@ class Workflow:
                     state[path] = 2
                     stack.pop()
                     trail.pop()
+        return None
+
+    def validate(self):
+        """Raises on cycles (see :meth:`find_cycle`)."""
+        trail = self.find_cycle()
+        if trail is not None:
+            raise ValueError(
+                f"cycle through {trail[-1]}: {' -> '.join(trail)}")
 
     def external_inputs(self) -> List[str]:
         """Ports consumed but produced by no step (workflow arguments)."""
@@ -292,17 +302,28 @@ class Workflow:
             raise ValueError("cycle in workflow (expand)")
         return order
 
-    def expand(self) -> "InvocationPlan":
-        """Compile the declared graph into the per-invocation DAG.
+    def stream_geometry(self, on_error: Optional[
+            Callable[[str, str, str], None]] = None
+            ) -> Tuple[Dict[str, List[Tuple[int, ...]]],
+                       Dict[str, List[Tuple[int, ...]]]]:
+        """Resolve every port's stream geometry without materialising
+        invocations: ``(port_tags, step_tags)`` where ``port_tags`` maps
+        each *stream* port to its ordered element tags (scalar ports are
+        absent) and ``step_tags`` maps each step to the tags it fires at
+        (``[()]`` for a scalar step).
 
-        Resolves every port's stream geometry (which tags flow through
-        it), checks the scatter/gather declarations are coherent, and
-        materialises one :class:`Invocation` per (step, tag).  The
-        expansion is deterministic — same workflow, same plan — which is
-        what lets the execution journal resume a partially-completed
-        scatter by invocation path.
+        This is the single source of truth for scatter/gather coherence,
+        shared by :meth:`expand` and the static checker.  A malformed
+        declaration calls ``on_error(kind, step_path, message)`` with
+        ``kind`` one of ``scatter-scalar``, ``gather-scalar``,
+        ``stream-undeclared``, ``zip-width``; the default raises
+        ValueError (expand's historical behaviour), while a collecting
+        hook records the problem, after which geometry recovers with the
+        scalar interpretation so downstream steps still get resolved.
         """
-        self.validate()
+        if on_error is None:
+            def on_error(kind: str, path: str, message: str):
+                raise ValueError(message)
         order = self._topo_order()
         # port -> ordered element tags; scalar ports are absent
         port_tags: Dict[str, List[Tuple[int, ...]]] = {}
@@ -314,24 +335,32 @@ class Workflow:
                 is_stream = port_name in port_tags
                 if slot in step.scatter or slot in step.gather:
                     if not is_stream:
-                        raise ValueError(
+                        on_error(
+                            "scatter-scalar" if slot in step.scatter
+                            else "gather-scalar", path,
                             f"{path}: slot {slot!r} declares "
                             f"{'scatter' if slot in step.scatter else 'gather'}"
                             f" but port {port_name!r} is scalar")
                 elif is_stream:
-                    raise ValueError(
+                    on_error(
+                        "stream-undeclared", path,
                         f"{path}: slot {slot!r} consumes stream port "
                         f"{port_name!r} — declare it in scatter (one "
                         f"invocation per element) or gather (collect the "
                         f"whole stream)")
-            if step.scatter:
-                tag_sets = [port_tags[step.inputs[s]] for s in step.scatter]
+            # recovery path only: a scattered slot whose port turned out
+            # scalar is dropped from the zip set (on_error already fired)
+            active = [s for s in step.scatter
+                      if step.inputs[s] in port_tags]
+            if active:
+                tag_sets = [port_tags[step.inputs[s]] for s in active]
                 first = tag_sets[0]
-                for slot, tags in zip(step.scatter[1:], tag_sets[1:]):
+                for slot, tags in zip(active[1:], tag_sets[1:]):
                     if tags != first:
-                        raise ValueError(
+                        on_error(
+                            "zip-width", path,
                             f"{path}: scattered slots zip by tag, but "
-                            f"{step.scatter[0]!r} and {slot!r} carry "
+                            f"{active[0]!r} and {slot!r} carry "
                             f"different streams ({len(first)} vs "
                             f"{len(tags)} elements)")
                 tags = list(first)
@@ -347,6 +376,21 @@ class Workflow:
                 else:
                     port_tags[port_name] = [t + (i,) for t in tags
                                             for i in range(width)]
+        return port_tags, step_tags
+
+    def expand(self) -> "InvocationPlan":
+        """Compile the declared graph into the per-invocation DAG.
+
+        Resolves every port's stream geometry (which tags flow through
+        it), checks the scatter/gather declarations are coherent, and
+        materialises one :class:`Invocation` per (step, tag).  The
+        expansion is deterministic — same workflow, same plan — which is
+        what lets the execution journal resume a partially-completed
+        scatter by invocation path.
+        """
+        self.validate()
+        port_tags, step_tags = self.stream_geometry()
+        order = self._topo_order()
 
         invocations: Dict[str, Invocation] = {}
         for path in order:
@@ -544,9 +588,41 @@ class InvocationPlan:
         return out
 
     def scatter_widths(self) -> Dict[str, int]:
-        """Declared step -> invocation count, for scattered steps only."""
+        """Declared step -> invocation count, for scattered steps only.
+        A zero-width scatter appears with width 0 (the step fires no
+        invocations — resume and the conformance corpus both need to see
+        that, not mistake it for a scalar step)."""
         return {path: len(tags) for path, tags in self._step_tags.items()
-                if len(tags) > 1}
+                if len(tags) != 1}
+
+    def summary(self) -> Dict[str, Any]:
+        """Canonical JSON-serialisable view of the plan.
+
+        Two workflows are *plan-identical* iff their summaries are equal —
+        this is what the conformance corpus and `streamflow check` compare
+        (invocation paths, token wiring, gather widths, requirements),
+        deliberately excluding the fns themselves.
+        """
+        invocations = {}
+        for ipath, inv in self.steps.items():
+            invocations[ipath] = {
+                "step": inv.step.path,
+                "tag": list(inv.tag),
+                "cardinality": inv.cardinality,
+                "inputs": dict(inv.inputs),
+                "outputs": list(inv.outputs),
+                "gather": dict(inv._gather_widths),
+                "requirements": {
+                    "cores": inv.requirements.cores,
+                    "memory_gb": inv.requirements.memory_gb,
+                },
+            }
+        return {
+            "invocations": invocations,
+            "external_inputs": self.external_inputs(),
+            "final_outputs": self.final_outputs(),
+            "widths": self.scatter_widths(),
+        }
 
     def fireable(self, done_tokens: Sequence[str],
                  started: Sequence[str]) -> List[str]:

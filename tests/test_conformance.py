@@ -1,0 +1,176 @@
+"""CWL-style conformance suite for the declarative frontend + checker.
+
+Table-driven: every case is one YAML file under ``tests/conformance/``
+(``doc:`` — a complete StreamFlow document, ``expect:`` — what loading
+it must produce; see ``tests/conformance/README.md`` for the contract).
+Adding a case is adding a file — this module discovers and runs them
+all.  Two lints gate the corpus itself: every diagnostic code the
+checker/frontend source can emit must be registered in ``checker.CODES``
+and exercised by at least one invalid case, so a new diagnostic cannot
+land without a conformance case proving it fires.
+"""
+import glob
+import os
+import re
+
+import pytest
+import yaml
+
+from repro.core import checker, frontend, streamflow_file
+from repro.core.checker import CODES, WorkflowCheckError, dry_run
+from repro.core.streamflow_file import load
+
+CORPUS = os.path.join(os.path.dirname(__file__), "conformance")
+VALID = sorted(glob.glob(os.path.join(CORPUS, "valid", "*.yaml")))
+INVALID = sorted(glob.glob(os.path.join(CORPUS, "invalid", "*.yaml")))
+
+#: expect.config keys -> StreamFlowConfig attributes the round-trip
+#: cases may pin (the acceptance criterion: cache/service/topology stay
+#: loadable from declarative documents)
+_CONFIG_KEYS = ("policy", "topology", "service", "cache", "checkpoint",
+                "fault")
+
+
+def _case(path):
+    with open(path) as f:
+        case = yaml.safe_load(f)
+    assert isinstance(case, dict) and set(case) == {"doc", "expect"}, \
+        f"{path}: a conformance case is exactly {{doc, expect}}"
+    return case["doc"], case["expect"]
+
+
+def _ids(paths):
+    return [os.path.basename(p)[:-len(".yaml")] for p in paths]
+
+
+# ---------------------------------------------------------------------------
+# Valid corpus: load + expand + dry-run to the expected plan
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("path", VALID, ids=_ids(VALID))
+def test_valid_document(path):
+    doc, expect = _case(path)
+    cfg = load(doc)                          # checking on: must not raise
+    if expect.get("loads_only"):
+        return
+    for key in _CONFIG_KEYS:
+        if key in expect.get("config", {}):
+            assert getattr(cfg, key) == expect["config"][key], key
+    for wname, exp in (expect.get("workflows") or {}).items():
+        assert wname in cfg.workflows, f"workflow {wname!r} missing"
+        plan = dry_run(cfg.workflows[wname])
+        if "invocations" in exp:
+            assert len(plan["invocations"]) == exp["invocations"], \
+                sorted(plan["invocations"])
+        if "widths" in exp:
+            assert plan["widths"] == exp["widths"]
+        if "external_inputs" in exp:
+            assert sorted(plan["external_inputs"]) == exp["external_inputs"]
+        if "final_outputs" in exp:
+            assert sorted(plan["final_outputs"]) == exp["final_outputs"]
+        if "targets" in exp:
+            for ipath, targets in exp["targets"].items():
+                assert ipath in plan["invocations"], ipath
+                assert plan["invocations"][ipath]["targets"] == targets, ipath
+        if "requirements" in exp:
+            for ipath, req in exp["requirements"].items():
+                assert ipath in plan["invocations"], ipath
+                assert plan["invocations"][ipath]["requirements"] == req, \
+                    ipath
+
+
+@pytest.mark.parametrize("path", VALID, ids=_ids(VALID))
+def test_valid_document_expands_after_load(path):
+    """The checker-accepted ⇒ expandable contract, on every valid case:
+    whatever load() returned must expand without raising (the corpus-wide
+    twin of the hypothesis property in test_expand_edges.py)."""
+    doc, _ = _case(path)
+    for entry in load(doc).workflows.values():
+        entry.workflow.expand()
+
+
+# ---------------------------------------------------------------------------
+# Invalid corpus: must fail the checker with the expected codes
+# ---------------------------------------------------------------------------
+
+@pytest.mark.parametrize("path", INVALID, ids=_ids(INVALID))
+def test_invalid_document(path):
+    doc, expect = _case(path)
+    with pytest.raises(WorkflowCheckError) as ei:
+        load(doc)
+    diags = ei.value.diagnostics
+    assert diags, "WorkflowCheckError with no diagnostics"
+    got = sorted({d.code for d in diags})
+    assert got == sorted(expect["codes"]), \
+        "\n".join(str(d) for d in diags)
+    for code, substring in (expect.get("locations") or {}).items():
+        locations = [d.location for d in diags if d.code == code]
+        assert any(substring in loc for loc in locations), \
+            f"{code}: no location containing {substring!r} in {locations}"
+    # structured-diagnostic shape: every entry carries a registered code,
+    # a location, and a message
+    for d in diags:
+        assert d.code in CODES
+        assert d.location and d.message
+        assert str(d) == f"{d.code} {d.location}: {d.message}"
+
+
+@pytest.mark.parametrize("path", INVALID, ids=_ids(INVALID))
+def test_invalid_document_loads_with_check_off(path):
+    """``check: off`` restores the historical behaviour: lazy mistakes
+    (those the old eager loader did not catch) load fine and would only
+    surface at run time; eager ones still raise, but as the historical
+    single-error StreamFlowFileError, never a WorkflowCheckError."""
+    doc, _ = _case(path)
+    try:
+        load(doc, check=False)
+    except WorkflowCheckError:
+        pytest.fail("check=False must not run the checker")
+    except (streamflow_file.StreamFlowFileError, ValueError):
+        pass                              # the historical eager failure
+
+
+# ---------------------------------------------------------------------------
+# Corpus lints: no untested diagnostics, no unregistered codes
+# ---------------------------------------------------------------------------
+
+def _emitted_codes():
+    """Every SF-code literal in the checker/frontend/loader source."""
+    emitted = set()
+    for mod in (checker, frontend, streamflow_file):
+        with open(mod.__file__) as f:
+            src = f.read()
+        # only literals in code positions: quoted, so the docstring
+        # table (unquoted) does not count as an emission site
+        emitted |= set(re.findall(r'["\'](SF\d{3})["\']', src))
+    return emitted
+
+
+def test_corpus_size():
+    assert len(VALID) >= 25, f"valid corpus shrank to {len(VALID)}"
+    assert len(INVALID) >= 25, f"invalid corpus shrank to {len(INVALID)}"
+
+
+def test_every_diagnostic_code_is_exercised():
+    """Adding a diagnostic to checker.CODES without an invalid-corpus
+    case exercising it fails here (the 'no untested diagnostics' CI
+    lint)."""
+    exercised = set()
+    for path in INVALID:
+        _, expect = _case(path)
+        exercised |= set(expect["codes"])
+    unexercised = sorted(set(CODES) - exercised)
+    assert not unexercised, \
+        f"diagnostic codes with no invalid-corpus case: {unexercised}"
+    unknown = sorted(exercised - set(CODES))
+    assert not unknown, f"corpus expects unregistered codes: {unknown}"
+
+
+def test_every_emitted_code_is_registered_and_vice_versa():
+    """The source emits exactly the codes CODES registers: an SF literal
+    outside the registry (or a registered code nothing can emit) is a
+    checker bug."""
+    emitted = _emitted_codes()
+    assert emitted == set(CODES), (
+        f"emitted-but-unregistered: {sorted(emitted - set(CODES))}, "
+        f"registered-but-never-emitted: {sorted(set(CODES) - emitted)}")

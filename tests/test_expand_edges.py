@@ -1,0 +1,203 @@
+"""Workflow.expand() edge cases the static checker must agree with:
+zero-width scatter, nested tag refs (``port[i.j]``), gather-of-gather,
+and the property tying them together — a document the checker accepts
+never raises during expansion."""
+import pytest
+
+from repro.core import (FaultConfig, ModelSpec, StreamFlowExecutor,
+                        WorkflowCheckError)
+from repro.core.streamflow_file import (Binding, StreamFlowFileError,
+                                        load as load_streamflow_file)
+from repro.core.workflow import Step, Workflow, token_ref
+
+
+def _pool(n=4):
+    return {"m": ModelSpec("m", "local",
+                           {"services": {"s": {"replicas": n}}})}
+
+
+def _ex(n=4):
+    return StreamFlowExecutor(_pool(n), fault=FaultConfig(speculative=False))
+
+
+# ---------------------------------------------------------------------------
+# Zero-width scatter
+# ---------------------------------------------------------------------------
+
+def test_zero_width_scatter_expands_to_no_invocations():
+    wf = Workflow("zero")
+    wf.add_step(Step("/src", lambda i, c: {"xs": []}, {}, ("xs",),
+                     streams={"xs": 0}))
+    wf.add_step(Step("/work", lambda i, c: {"ys": i["x"]}, {"x": "xs"},
+                     ("ys",), scatter=("x",)))
+    wf.add_step(Step("/agg", lambda i, c: {"n": len(i["parts"])},
+                     {"parts": "ys"}, ("n",), gather=("parts",)))
+    plan = wf.expand()
+    assert sorted(plan.steps) == ["/agg", "/src"]   # no /work@i at width 0
+    assert plan.scatter_widths() == {"/work": 0}
+
+
+def test_zero_width_scatter_executes_gather_of_empty_stream():
+    wf = Workflow("zero-run")
+    wf.add_step(Step("/src", lambda i, c: {"xs": []}, {}, ("xs",),
+                     streams={"xs": 0}))
+    wf.add_step(Step("/work", lambda i, c: {"ys": i["x"] * 2}, {"x": "xs"},
+                     ("ys",), scatter=("x",)))
+    wf.add_step(Step("/agg", lambda i, c: {"n": len(i["parts"])},
+                     {"parts": "ys"}, ("n",), gather=("parts",)))
+    res = _ex().run(wf, [Binding("/", "m", "s")], {})
+    assert res.outputs["n"] == 0             # the gather saw []
+
+
+# ---------------------------------------------------------------------------
+# Nested tags: port[i.j]
+# ---------------------------------------------------------------------------
+
+def test_nested_scatter_tokens_use_dotted_tag_refs():
+    wf = Workflow("nested")
+    wf.add_step(Step("/src", lambda i, c: {"xs": [1, 2]}, {}, ("xs",),
+                     streams={"xs": 2}))
+    wf.add_step(Step("/mid", lambda i, c: {"ys": [i["x"], i["x"] * 10]},
+                     {"x": "xs"}, ("ys",), scatter=("x",),
+                     streams={"ys": 2}))
+    wf.add_step(Step("/leaf", lambda i, c: {"z": i["y"] + 1},
+                     {"y": "ys"}, ("z",), scatter=("y",)))
+    plan = wf.expand()
+    assert plan.scatter_widths() == {"/mid": 2, "/leaf": 4}
+    leaf_inputs = {p: inv.inputs for p, inv in plan.steps.items()
+                   if inv.step.path == "/leaf"}
+    assert leaf_inputs["/leaf@0.1"] == {"y": token_ref("ys", (0, 1))}
+    assert token_ref("ys", (0, 1)) == "ys[0.1]"
+    # execution resolves the dotted refs in stream order
+    res = _ex().run(wf, [Binding("/", "m", "s")], {})
+    assert res.outputs["z"] == [2, 11, 3, 21]
+
+
+# ---------------------------------------------------------------------------
+# Gather of a nested stream / gather after gather
+# ---------------------------------------------------------------------------
+
+def test_gather_flattens_nested_stream_in_tag_order():
+    wf = Workflow("gg")
+    wf.add_step(Step("/src", lambda i, c: {"xs": [0, 100]}, {}, ("xs",),
+                     streams={"xs": 2}))
+    wf.add_step(Step("/mid", lambda i, c: {"ys": [i["x"], i["x"] + 1]},
+                     {"x": "xs"}, ("ys",), scatter=("x",),
+                     streams={"ys": 2}))
+    wf.add_step(Step("/agg", lambda i, c: {"all": list(i["parts"])},
+                     {"parts": "ys"}, ("all",), gather=("parts",)))
+    plan = wf.expand()
+    (agg,) = [inv for inv in plan.steps.values()
+              if inv.step.path == "/agg"]
+    # a gather slot expands into one indexed slot per element, ordered
+    # by tag: parts[0]..parts[3] collect the nested stream flattened
+    assert [agg.inputs[f"parts[{k}]"] for k in range(4)] == \
+        ["ys[0.0]", "ys[0.1]", "ys[1.0]", "ys[1.1]"]
+    assert "parts" not in agg.inputs
+    res = _ex().run(wf, [Binding("/", "m", "s")], {})
+    assert res.outputs["all"] == [0, 1, 100, 101]
+
+
+def test_gather_of_gather_two_stages():
+    """A gather whose input stream is seeded by an earlier gather: the
+    v10-style two-stage pipeline collapses and re-expands correctly."""
+    wf = Workflow("two-stage")
+    wf.add_step(Step("/src", lambda i, c: {"xs": [1, 2, 3]}, {}, ("xs",),
+                     streams={"xs": 3}))
+    wf.add_step(Step("/work", lambda i, c: {"ys": i["x"] * 2},
+                     {"x": "xs"}, ("ys",), scatter=("x",)))
+    wf.add_step(Step("/regroup",
+                     lambda i, c: {"chunks": [sum(i["parts"]),
+                                              len(i["parts"])]},
+                     {"parts": "ys"}, ("chunks",), gather=("parts",),
+                     streams={"chunks": 2}))
+    wf.add_step(Step("/work2", lambda i, c: {"zs": i["c"] + 1},
+                     {"c": "chunks"}, ("zs",), scatter=("c",)))
+    wf.add_step(Step("/final", lambda i, c: {"out": list(i["parts"])},
+                     {"parts": "zs"}, ("out",), gather=("parts",)))
+    plan = wf.expand()
+    assert plan.scatter_widths() == {"/work": 3, "/work2": 2}
+    res = _ex().run(wf, [Binding("/", "m", "s")], {})
+    # stage 1: [2,4,6] -> regroup [12, 3] -> work2 [13, 4] -> final
+    assert res.outputs["out"] == [13, 4]
+
+
+# ---------------------------------------------------------------------------
+# Property: checker-accepted ⇒ expandable
+# ---------------------------------------------------------------------------
+
+try:        # hypothesis ships in requirements-dev / CI; local runs skip
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
+
+_TYPES = ["any", "int", "record", "array<int>", "integer"]  # one invalid
+_PORTS = ["p0", "p1", "p2", "p3"]
+
+if HAVE_HYPOTHESIS:
+    @st.composite
+    def _declarative_docs(draw):
+        """Random small declarative documents — deliberately allowed to
+        be nonsense (dangling ports, scalar scatters, width conflicts,
+        bad bindings) so the property exercises both checker verdicts."""
+        n_steps = draw(st.integers(1, 4))
+        tools, steps = {}, {}
+        for i in range(n_steps):
+            tname = f"t{i}"
+            n_in = draw(st.integers(0, 2))
+            n_out = draw(st.integers(1, 2))
+            tools[tname] = {
+                "inputs": {f"in{j}": draw(st.sampled_from(_TYPES))
+                           for j in range(n_in)},
+                "outputs": {f"out{j}": draw(st.sampled_from(_TYPES))
+                            for j in range(n_out)},
+            }
+            decl = {"tool": tname}
+            if n_in:
+                decl["in"] = {f"in{j}": draw(st.sampled_from(_PORTS))
+                              for j in range(n_in)}
+                wired = list(decl["in"])
+                mode = draw(st.sampled_from(["none", "scatter", "gather"]))
+                if mode != "none":
+                    decl[mode] = [draw(st.sampled_from(wired))]
+            decl["out"] = {f"out{j}": draw(st.sampled_from(_PORTS))
+                           for j in range(n_out)}
+            if draw(st.booleans()):
+                port = draw(st.sampled_from(list(decl["out"].values())))
+                decl["streams"] = {port: draw(st.integers(0, 3))}
+            steps[f"/s{i}"] = decl
+        bindings = [{"step": draw(st.sampled_from(["/", "/s0", "/ghost"])),
+                     "target": {"model": "site",
+                                "service": draw(st.sampled_from(
+                                    ["svc", "gpu"]))}}]
+        return {
+            "version": "v1.0",
+            "models": {"site": {"type": "local",
+                                "config": {"services": {
+                                    "svc": {"replicas": 2}}}}},
+            "tools": tools,
+            "workflows": {"w": {"type": "declarative", "steps": steps,
+                                "bindings": bindings}},
+        }
+
+    @settings(max_examples=150, deadline=None)
+    @given(doc=_declarative_docs())
+    def test_checker_accepted_documents_always_expand(doc):
+        """load() either rejects the document with structured diagnostics
+        or returns workflows whose expansion cannot raise:
+        'checker-accepted' and 'expandable' are the same predicate."""
+        try:
+            cfg = load_streamflow_file(doc)
+        except WorkflowCheckError as e:
+            assert e.diagnostics
+            return
+        except StreamFlowFileError:
+            return                            # schema-level rejection
+        for entry in cfg.workflows.values():
+            plan = entry.workflow.expand()    # must never raise
+            assert plan.summary()["invocations"] is not None
+else:
+    @pytest.mark.skip(reason="hypothesis not installed")
+    def test_checker_accepted_documents_always_expand():
+        pass

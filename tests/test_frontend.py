@@ -1,0 +1,259 @@
+"""Declarative tool/step frontend (PR 8 tentpole): compile, plan
+identity against the hand-written §5 builders, pre-admission checking in
+the service layer, and the ``streamflow check`` CLI."""
+import json
+import os
+import subprocess
+import sys
+import time
+
+import pytest
+
+from repro.configs.paper_pipeline import (build_scatter_workflow,
+                                          build_workflow,
+                                          streamflow_doc_declarative_chains,
+                                          streamflow_doc_declarative_hybrid)
+from repro.core import (COMPLETE, FaultConfig, ModelSpec, StreamFlowExecutor,
+                        WorkflowCheckError, WorkflowService,
+                        load_streamflow_file)
+from repro.core.service import ServiceError
+
+SCATTER_ARGS = dict(n_samples=4, rows_per_sample=4, seq_len=16,
+                    train_steps=1, batch=2, vocab=64, d_model=16)
+CHAIN_ARGS = dict(n_chains=3, rows_per_chain=8, seq_len=16, train_steps=1,
+                  batch=2, vocab=64, d_model=16)
+
+
+# ---------------------------------------------------------------------------
+# Plan identity: declarative documents vs the Python builders (§5)
+# ---------------------------------------------------------------------------
+
+def test_declarative_scatter_plan_identical_to_builder():
+    """The scatter variant of the single-cell pipeline, expressed purely
+    via tools:/steps:, compiles to the exact invocation plan
+    build_scatter_workflow produces — paths, wiring, tags, gather widths
+    and requirements all equal."""
+    doc = streamflow_doc_declarative_hybrid(**SCATTER_ARGS)
+    cfg = load_streamflow_file(doc)
+    declared = cfg.workflows["single-cell-scatter"].workflow
+    built = build_scatter_workflow(**SCATTER_ARGS)
+    assert declared.expand().summary() == built.expand().summary()
+
+
+def test_declarative_chains_plan_identical_to_builder():
+    """The scalar (hand-unrolled) variant: per-chain steps with out:
+    renames and args: {chain: i} match build_workflow's plan exactly."""
+    doc = streamflow_doc_declarative_chains(**CHAIN_ARGS)
+    cfg = load_streamflow_file(doc)
+    declared = cfg.workflows["single-cell"].workflow
+    built = build_workflow(**CHAIN_ARGS)
+    assert declared.expand().summary() == built.expand().summary()
+
+
+def test_declarative_scatter_executes_end_to_end():
+    """The declarative document does not just plan — it runs: the
+    resolved tool implementations execute the same pipeline the builder
+    would have."""
+    doc = streamflow_doc_declarative_hybrid(hpc_replicas=2,
+                                            cloud_replicas=2,
+                                            **SCATTER_ARGS)
+    cfg = load_streamflow_file(doc)
+    entry = cfg.workflows["single-cell-scatter"]
+    ex = StreamFlowExecutor.from_config(
+        cfg, fault=FaultConfig(speculative=False))
+    res = ex.run(entry.workflow, entry.bindings, inputs={"seed": 0})
+    assert res.outputs["summary"]["n_samples"] == SCATTER_ARGS["n_samples"]
+    assert len(res.outputs["stats"]) == SCATTER_ARGS["n_samples"]
+
+
+def test_declarative_chains_execute_end_to_end():
+    doc = streamflow_doc_declarative_chains(**CHAIN_ARGS)
+    cfg = load_streamflow_file(doc)
+    entry = cfg.workflows["single-cell"]
+    ex = StreamFlowExecutor.from_config(
+        cfg, fault=FaultConfig(speculative=False))
+    res = ex.run(entry.workflow, entry.bindings, inputs={"seed": 0})
+    labels = [k for k in res.outputs if k.startswith("labels")]
+    assert len(labels) == CHAIN_ARGS["n_chains"]
+
+
+# ---------------------------------------------------------------------------
+# Service layer: submit_document rejects failing documents pre-admission
+# ---------------------------------------------------------------------------
+
+MODELS = {"site": ModelSpec("site", "local",
+                            {"services": {"svc": {"replicas": 2}}})}
+
+GOOD_DOC = {
+    "version": "v1.0",
+    "models": {"site": {"type": "local",
+                        "config": {"services": {"svc": {"replicas": 2}}}}},
+    "tools": {
+        "make": {"outputs": {"x": "int"}},
+        "use": {"inputs": {"x": "int"}, "outputs": {"y": "int"}},
+    },
+    "workflows": {
+        "w": {"type": "declarative",
+              "steps": {"/make": {"tool": "make"},
+                        "/use": {"tool": "use", "in": {"x": "x"}}},
+              "bindings": [{"step": "/",
+                            "target": {"model": "site",
+                                       "service": "svc"}}]}},
+}
+
+
+def _service(**kw):
+    kw.setdefault("fault", FaultConfig(speculative=False))
+    kw.setdefault("deadlock_timeout_s", 0.5)
+    return WorkflowService(MODELS, **kw)
+
+
+def _wait_complete(svc, rid, timeout=10.0):
+    deadline = time.time() + timeout
+    while time.time() < deadline:
+        if svc.status(rid).state == COMPLETE:
+            return svc.status(rid)
+        time.sleep(0.01)
+    raise AssertionError(f"run {rid} not COMPLETE: {svc.status(rid).state}")
+
+
+def test_submit_document_runs_declarative_workflow():
+    svc = _service()
+    try:
+        rid = svc.submit_document(GOOD_DOC)
+        status = _wait_complete(svc, rid)
+        assert status.state == COMPLETE
+    finally:
+        svc.close()
+
+
+def test_submit_document_rejects_before_admission():
+    """A failing document raises the typed WorkflowCheckError and never
+    becomes a Run — no queue slot, no tenant accounting, no deploys."""
+    bad = json.loads(json.dumps(GOOD_DOC))
+    bad["workflows"]["w"]["steps"]["/use"]["in"] = {"x": "ghost"}
+    bad["workflows"]["w"]["bindings"].append(
+        {"step": "/nowhere", "target": {"model": "site", "service": "svc"}})
+    svc = _service()
+    try:
+        with pytest.raises(WorkflowCheckError) as ei:
+            svc.submit_document(bad)
+        assert {d.code for d in ei.value.diagnostics} >= {"SF111", "SF204"}
+        assert svc.list_runs() == []              # nothing was admitted
+    finally:
+        svc.close()
+
+
+def test_submit_document_checks_even_with_check_off():
+    """submit forces the checker on: multi-tenant admission must not
+    trust a document's own check: off."""
+    bad = json.loads(json.dumps(GOOD_DOC))
+    bad["check"] = False
+    bad["workflows"]["w"]["steps"]["/use"]["in"] = {"x": "ghost"}
+    svc = _service()
+    try:
+        with pytest.raises(WorkflowCheckError):
+            svc.submit_document(bad)
+    finally:
+        svc.close()
+
+
+def test_submit_document_workflow_selection():
+    multi = json.loads(json.dumps(GOOD_DOC))
+    multi["workflows"]["w2"] = json.loads(
+        json.dumps(multi["workflows"]["w"]))
+    # second workflow would collide on port names only within its own
+    # graph — rename its ports
+    multi["tools"]["make2"] = {"outputs": {"x2": "int"}}
+    multi["tools"]["use2"] = {"inputs": {"x2": "int"},
+                              "outputs": {"y2": "int"}}
+    multi["workflows"]["w2"] = {
+        "type": "declarative",
+        "steps": {"/make": {"tool": "make2"},
+                  "/use": {"tool": "use2", "in": {"x2": "x2"}}},
+        "bindings": [{"step": "/",
+                      "target": {"model": "site", "service": "svc"}}]}
+    svc = _service()
+    try:
+        with pytest.raises(ServiceError, match="pass workflow="):
+            svc.submit_document(multi)
+        with pytest.raises(ServiceError, match="no workflow"):
+            svc.submit_document(multi, workflow="nope")
+        rid = svc.submit_document(multi, workflow="w2")
+        assert _wait_complete(svc, rid).state == COMPLETE
+    finally:
+        svc.close()
+
+
+def test_submit_document_rejects_undeployed_models():
+    """A document can be self-consistent yet bind models this service
+    does not deploy — that is a ServiceError, not a checker diagnostic."""
+    other = json.loads(json.dumps(GOOD_DOC))
+    other["models"]["elsewhere"] = {
+        "type": "local", "config": {"services": {"svc": {"replicas": 1}}}}
+    other["workflows"]["w"]["bindings"] = [
+        {"step": "/", "target": {"model": "elsewhere", "service": "svc"}}]
+    svc = _service()
+    try:
+        with pytest.raises(ServiceError, match="does not deploy"):
+            svc.submit_document(other)
+    finally:
+        svc.close()
+
+
+# ---------------------------------------------------------------------------
+# streamflow check CLI
+# ---------------------------------------------------------------------------
+
+def _run_cli(*argv, timeout=120):
+    root = os.path.join(os.path.dirname(__file__), "..")
+    env = dict(os.environ, PYTHONPATH="src")
+    return subprocess.run(
+        [sys.executable, "-m", "repro.cli", *argv],
+        cwd=root, env=env, capture_output=True, text=True, timeout=timeout)
+
+
+def test_cli_check_ok(tmp_path):
+    import yaml
+    path = tmp_path / "good.yaml"
+    path.write_text(yaml.safe_dump(GOOD_DOC))
+    out = _run_cli("check", str(path))
+    assert out.returncode == 0, out.stdout + out.stderr
+    assert "OK:" in out.stdout
+    assert "2 invocation(s)" in out.stdout
+
+
+def test_cli_check_fail_lists_diagnostics(tmp_path):
+    import yaml
+    bad = json.loads(json.dumps(GOOD_DOC))
+    bad["workflows"]["w"]["steps"]["/use"]["in"] = {"x": "ghost"}
+    bad["workflows"]["w"]["steps"]["/lost"] = {"tool": "imaginary"}
+    path = tmp_path / "bad.yaml"
+    path.write_text(yaml.safe_dump(bad))
+    out = _run_cli("check", str(path))
+    assert out.returncode == 1
+    lines = [l.split("\t") for l in out.stdout.splitlines() if "\t" in l]
+    codes = {parts[0] for parts in lines}
+    assert codes == {"SF101", "SF111"}
+    assert all(len(parts) == 3 for parts in lines)
+    assert "FAIL:" in out.stdout
+
+
+def test_cli_check_plan_json(tmp_path):
+    import yaml
+    path = tmp_path / "good.yaml"
+    path.write_text(yaml.safe_dump(GOOD_DOC))
+    out = _run_cli("check", str(path), "--plan")
+    assert out.returncode == 0
+    plans = json.loads(out.stdout[:out.stdout.rindex("OK:")])
+    assert set(plans["w"]["invocations"]) == {"/make", "/use"}
+    assert plans["w"]["invocations"]["/use"]["targets"] == [["site", "svc"]]
+
+
+def test_cli_check_unloadable_file(tmp_path):
+    path = tmp_path / "broken.yaml"
+    path.write_text("version: v9.9\n")
+    out = _run_cli("check", str(path))
+    assert out.returncode == 1
+    assert out.stdout.startswith("SCHEMA\t")
+    assert "FAIL:" in out.stdout

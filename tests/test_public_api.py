@@ -14,6 +14,7 @@ EXPECTED = [
     "BackfillPolicy",
     "Binding",
     "CANCELED",
+    "CHECKER_CODES",
     "COMPLETE",
     "CacheConfig",
     "CheckpointConfig",
@@ -24,6 +25,7 @@ EXPECTED = [
     "DataRef",
     "DeploymentManager",
     "DeploymentPool",
+    "Diagnostic",
     "DurationTracker",
     "EXECUTOR_ERROR",
     "EventSink",
@@ -77,6 +79,8 @@ EXPECTED = [
     "TERMINAL_STATES",
     "TenantPolicy",
     "Token",
+    "ToolInput",
+    "ToolSpec",
     "TokenAvailable",
     "TopologyGraph",
     "TransferRecord",
@@ -85,13 +89,16 @@ EXPECTED = [
     "WidestFirstPolicy",
     "Workflow",
     "WorkflowCancelled",
+    "WorkflowCheckError",
     "WorkflowCompleted",
     "WorkflowEvent",
     "WorkflowFailed",
     "WorkflowService",
     "WorkflowStarted",
+    "compile_declarative",
     "content_digest",
     "deserialize",
+    "dry_run",
     "get_external_site",
     "invocation_base",
     "invocation_memo_key",
@@ -99,6 +106,7 @@ EXPECTED = [
     "make_connector",
     "match_binding",
     "parse_token_ref",
+    "parse_tools",
     "serialize",
     "start_external_site",
     "stop_external_site",

@@ -131,7 +131,10 @@ def test_step_decl_errors():
     with pytest.raises(ValueError, match="both scatter and gather"):
         Step("/a", None, {"x": "xs"}, ("y",), scatter=("x",), gather=("x",))
     with pytest.raises(ValueError, match="width"):
-        Step("/a", None, {}, ("y",), streams={"y": 0})
+        Step("/a", None, {}, ("y",), streams={"y": -1})
+    with pytest.raises(ValueError, match="width"):
+        Step("/a", None, {}, ("y",), streams={"y": True})
+    Step("/a", None, {}, ("y",), streams={"y": 0})   # empty streams are legal
     with pytest.raises(ValueError, match="not an .*output"):
         Step("/a", None, {}, ("y",), streams={"z": 2})
     with pytest.raises(ValueError, match="may not contain"):

@@ -38,6 +38,47 @@ def test_schema_rejections(mutate, msg):
         load_streamflow_file(doc)
 
 
+@pytest.mark.parametrize("mutate,path", [
+    # every validator error names the *full* JSON path to the offending
+    # key, not just the top-level section
+    (lambda d: d["workflows"]["single-cell"]["bindings"][0]["target"]
+        .pop("service"),
+     r"\$\.workflows\.single-cell\.bindings\[0\]\.target\.service: "
+     r"missing required key"),
+    (lambda d: d["workflows"]["single-cell"]["bindings"][0]
+        .update(bogus=1),
+     r"\$\.workflows\.single-cell\.bindings\[0\]\.bogus: unexpected key"),
+    (lambda d: d["workflows"]["single-cell"]["bindings"][0]["target"]
+        .pop("model"),
+     r"\$\.workflows\.single-cell\.bindings\[0\]\.target\.model: "
+     r"missing required key"),
+])
+def test_schema_errors_carry_full_nested_path(mutate, path):
+    doc = streamflow_doc_full_hpc(2)
+    mutate(doc)
+    with pytest.raises(StreamFlowFileError, match=path):
+        load_streamflow_file(doc)
+
+
+def test_schema_errors_nested_paths_in_declarative_sections():
+    from repro.configs.paper_pipeline import streamflow_doc_declarative_hybrid
+
+    doc = streamflow_doc_declarative_hybrid(n_samples=2)
+    doc["tools"]["mkfastq"]["requirements"]["cores"] = 0
+    with pytest.raises(StreamFlowFileError,
+                       match=r"\$\.tools\.mkfastq\.requirements\.cores: "
+                             r"0 is below the minimum 1"):
+        load_streamflow_file(doc)
+
+    doc = streamflow_doc_declarative_hybrid(n_samples=2)
+    doc["workflows"]["single-cell-scatter"]["steps"]["/mkfastq"]["wat"] = 1
+    with pytest.raises(
+            StreamFlowFileError,
+            match=r"\$\.workflows\.single-cell-scatter\.steps\./mkfastq"
+                  r"\.wat: unexpected key"):
+        load_streamflow_file(doc)
+
+
 def test_binding_to_unknown_model_rejected():
     doc = streamflow_doc_full_hpc(2)
     doc["workflows"]["single-cell"]["bindings"][0]["target"]["model"] = "nope"
