@@ -1,0 +1,119 @@
+"""Elastic replicas vs a static pool (PR 9 autoscaler).
+
+Three runs of the same embarrassingly-parallel workload (``N_STEPS``
+independent ``WORK_S``-second steps bound to one 1-slot site):
+
+  static     no ``autoscale:`` block — the control.  One resource, so the
+             whole batch serializes: makespan ~= ``N_STEPS * WORK_S``
+  elastic    ``autoscale.models.site.max = MAX_REPLICAS`` — queue pressure
+             grows the pool to ``MAX_REPLICAS`` sites and the batch runs
+             ~``MAX_REPLICAS``-wide; scale-up placement reuses the PR-4
+             topology clone, so replicas inherit the base site's links
+  preempted  elastic + ``preemptible: true``, with a revocation driver
+             that kills a replica *while it has work in flight* (spot
+             semantics).  The run must still complete — dead attempts
+             retry on survivors, never the revoked site — and the wasted
+             work (attempts lost to revocations) must stay a bounded
+             fraction of the useful work
+
+``compare.py`` gates two claims: growing the pool beats the static
+control (``autoscale_makespan_ratio`` < 1, elastic/static wall in one
+process) and revocation waste is bounded
+(``autoscale_wasted_work_ratio``: wasted attempts per useful invocation).
+"""
+from __future__ import annotations
+
+import time
+
+from repro.core import FaultConfig, ModelSpec, StreamFlowExecutor
+from repro.core.streamflow_file import Binding
+from repro.core.workflow import Requirements, Step, Workflow
+
+N_STEPS = 16
+WORK_S = 0.05
+MAX_REPLICAS = 4               # 1 base + 3 clones
+N_PREEMPTS = 2
+
+
+def _models():
+    return {"site": ModelSpec("site", "local",
+                              {"services": {"svc": {"replicas": 1}}})}
+
+
+def _bindings():
+    return [Binding("/", "site", "svc")]
+
+
+def _workflow() -> Workflow:
+    wf = Workflow("autoscale-bench")
+    for i in range(N_STEPS):
+        def fn(inputs, ctx, i=i):
+            time.sleep(WORK_S)
+            return {f"out{i}": inputs["seed"] + i}
+        wf.add_step(Step(f"/work{i}", fn, {"seed": "seed"}, (f"out{i}",),
+                         requirements=Requirements(cores=1)))
+    return wf
+
+
+def _autoscale(preemptible: bool) -> dict:
+    return {"models": {"site": {"min": 1, "max": MAX_REPLICAS,
+                                "target_queue_depth": 1,
+                                "preemptible": preemptible}}}
+
+
+def _run(mode: str) -> dict:
+    ex = StreamFlowExecutor(
+        _models(), fault=FaultConfig(speculative=False),
+        max_workers=MAX_REPLICAS * 2,
+        autoscale=None if mode == "static" else _autoscale(
+            preemptible=(mode == "preempted")))
+
+    state = {"preempts": 0}
+    if mode == "preempted":
+        def hook(tick, completed):
+            sc = ex.autoscaler
+            if state["preempts"] >= N_PREEMPTS or len(completed) < 2:
+                return          # let the pool grow and work start first
+            for rep in sc.replicas("site"):
+                if ex.scheduler.running_on(rep):   # spot revocation lands
+                    state["preempts"] += 1         # mid-step, by design
+                    sc.preempt(rep)
+                    break
+        ex.tick_hook = hook
+
+    t0 = time.time()
+    res = ex.run(_workflow(), _bindings(), {"seed": 1})
+    wall = time.time() - t0
+    assert len(res.outputs) == N_STEPS, "benchmark run lost outputs"
+    scaler = ex.autoscaler
+    return {
+        "mode": mode,
+        "makespan_s": round(wall, 4),
+        "useful_invocations": N_STEPS,
+        "wasted_invocations": res.wasted_invocations,
+        "wasted_seconds": round(res.wasted_seconds, 4),
+        "scale_ups": scaler.scale_up_events if scaler else 0,
+        "preempts": state["preempts"],
+    }
+
+
+def run() -> list:
+    rows = [_run("static"), _run("elastic"), _run("preempted")]
+    print(f"{'mode':<12} {'makespan_s':>10} {'scale_ups':>9} "
+          f"{'preempts':>8} {'wasted':>6} {'wasted_s':>8}")
+    for r in rows:
+        print(f"{r['mode']:<12} {r['makespan_s']:>10} {r['scale_ups']:>9} "
+              f"{r['preempts']:>8} {r['wasted_invocations']:>6} "
+              f"{r['wasted_seconds']:>8}")
+    by = {r["mode"]: r for r in rows}
+    ratio = by["elastic"]["makespan_s"] / max(by["static"]["makespan_s"],
+                                             1e-9)
+    print(f"\nelastic/static makespan: {ratio:.3f} "
+          f"(pool grew {by['elastic']['scale_ups']}x); preempted run "
+          f"wasted {by['preempted']['wasted_invocations']} attempt(s) "
+          f"across {by['preempted']['preempts']} revocation(s)")
+    return rows
+
+
+if __name__ == "__main__":
+    run()

@@ -23,10 +23,10 @@ def _timed(fn, *a, **kw):
 
 
 def _sections():
-    from benchmarks import (bench_cache, bench_deployment, bench_fault,
-                            bench_pipeline, bench_recovery, bench_routing,
-                            bench_scatter, bench_scheduler, bench_service,
-                            bench_timeline, bench_transfer)
+    from benchmarks import (bench_autoscale, bench_cache, bench_deployment,
+                            bench_fault, bench_pipeline, bench_recovery,
+                            bench_routing, bench_scatter, bench_scheduler,
+                            bench_service, bench_timeline, bench_transfer)
 
     def timeline():
         out, us = _timed(bench_timeline.run, "both")
@@ -97,6 +97,15 @@ def _sections():
                          f"bytes={by['cold']['transfer_bytes']}"
                          f"->{by['warm']['transfer_bytes']}")
 
+    def autoscale():
+        out, us = _timed(bench_autoscale.run)
+        by = {r["mode"]: r for r in out}
+        return out, us, (f"makespan={by['static']['makespan_s']}s"
+                         f"->{by['elastic']['makespan_s']}s;"
+                         f"scale_ups={by['elastic']['scale_ups']};"
+                         f"wasted={by['preempted']['wasted_invocations']}"
+                         f"/{by['preempted']['useful_invocations']}")
+
     def scatter():
         out, us = _timed(bench_scatter.run)
         by = {r["mode"]: r for r in out}
@@ -127,6 +136,8 @@ def _sections():
          "deployments under bursty multi-tenant load", service),
         ("cache_memoization", "bench_cache — cross-run invocation "
          "memoization: warm re-run vs cold", cache),
+        ("autoscale_elasticity", "bench_autoscale — elastic replicas vs "
+         "static pool, plus spot preemption waste", autoscale),
     ]
 
 

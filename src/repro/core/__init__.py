@@ -17,8 +17,12 @@ from repro.core.connector import (Connector, ConnectorCopyKind, ObjectStore,
 from repro.core.connectors import (LocalConnector, MeshConnector,
                                    MultiPodConnector, SimClusterConnector,
                                    make_connector)
-from repro.core.deployment import DeploymentManager, ModelSpec
-from repro.core.scheduler import (Scheduler, Policy, DataLocalityPolicy,
+from repro.core.deployment import (DeploymentManager, DeploymentPlane,
+                                   ModelSpec, replica_base)
+from repro.core.autoscale import (AutoscaleConfig, AutoscalePolicy,
+                                  Autoscaler)
+from repro.core.scheduler import (Scheduler, SchedulerSnapshot, Policy,
+                                  DataLocalityPolicy,
                                   RoundRobinPolicy, LoadBalancePolicy,
                                   BackfillPolicy, LocalityBatchPolicy,
                                   WidestFirstPolicy, ScatterSpreadPolicy,
@@ -66,10 +70,12 @@ __all__ = [
     "LocalConnector", "MeshConnector", "MultiPodConnector",
     "SimClusterConnector", "make_connector",
     "start_external_site", "get_external_site", "stop_external_site",
-    # deployment
-    "DeploymentManager", "ModelSpec",
+    # deployment + autoscaling
+    "DeploymentManager", "DeploymentPlane", "ModelSpec", "replica_base",
+    "AutoscaleConfig", "AutoscalePolicy", "Autoscaler",
     # scheduling
-    "Scheduler", "Policy", "DataLocalityPolicy", "RoundRobinPolicy",
+    "Scheduler", "SchedulerSnapshot",
+    "Policy", "DataLocalityPolicy", "RoundRobinPolicy",
     "LoadBalancePolicy", "BackfillPolicy", "LocalityBatchPolicy",
     "WidestFirstPolicy", "ScatterSpreadPolicy", "JobDescription",
     "JobAllocation", "ResourceAllocation", "JobStatus", "POLICIES",

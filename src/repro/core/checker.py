@@ -50,6 +50,9 @@ SF204   binding path matches no step in the workflow
 SF210   step requirements unsatisfiable by every bound target
 SF220   scatter block names an unknown step
 SF221   scatter block names a slot that is not an input
+SF230   autoscale block names an unknown model
+SF231   autoscale policy declares min > max replicas
+SF232   autoscale marks an external (user-managed) site preemptible
 ======  =====================================================
 """
 from __future__ import annotations
@@ -102,6 +105,9 @@ CODES: Dict[str, str] = {
     "SF210": "unsatisfiable-requirements",
     "SF220": "scatter-block-unknown-step",
     "SF221": "scatter-block-unknown-slot",
+    "SF230": "autoscale-unknown-model",
+    "SF231": "autoscale-min-exceeds-max",
+    "SF232": "autoscale-preemptible-external",
 }
 
 
@@ -403,6 +409,32 @@ def check_bindings(name: str, wf: Workflow, raw_bindings: List[dict],
                    f"step {path} requires cores>={req.cores}, "
                    f"memory_gb>={req.memory_gb:g}, but no bound target "
                    f"satisfies it: {offers}")
+
+
+def check_autoscale(block: dict, models: Dict[str, ModelSpec],
+                    report: Callable[[str, str, str], None]):
+    """The ``autoscale:`` block vs. the declared environments: per-model
+    policies must name a declared model (SF230), keep ``min <= max``
+    (SF231), and never mark an ``external: true`` site preemptible
+    (SF232) — a user-managed site is not the engine's to revoke."""
+    for name, pol in (block.get("models") or {}).items():
+        loc = f"autoscale.models.{name}"
+        pol = pol or {}
+        model = models.get(name)
+        if model is None:
+            report("SF230", loc,
+                   f"autoscale names unknown model {name!r} "
+                   f"(have {sorted(models)})")
+            continue
+        lo, hi = pol.get("min", 1), pol.get("max", 1)
+        if isinstance(lo, (int, float)) and isinstance(hi, (int, float)) \
+                and lo > hi:
+            report("SF231", loc,
+                   f"min replicas ({lo}) exceeds max ({hi})")
+        if pol.get("preemptible") and model.external:
+            report("SF232", loc,
+                   f"model {name!r} is external (user-managed): the "
+                   f"engine cannot revoke a site it does not deploy")
 
 
 # ---------------------------------------------------------------------------

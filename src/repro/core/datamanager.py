@@ -199,6 +199,28 @@ class DataManager:
                 self.remote_paths[token] = [
                     l for l in self.remote_paths[token] if l.model != model]
 
+    def stage_off(self, model: str) -> List[str]:
+        """Planned scale-down/preemption: pull every token whose *only*
+        registered copy lives on ``model`` back to the management node
+        (and inline it into the journal, checkpoint policy permitting)
+        before the site is undeployed.  Tokens with another replica, or
+        already collected, are skipped; tokens the dying site can no
+        longer serve are left to journal recovery.  Returns the tokens
+        actually staged."""
+        with self._lock:
+            victims = [t for t, locs in self.remote_paths.items()
+                       if locs and all(l.model == model for l in locs)]
+        staged = []
+        for token in victims:
+            if not self.local_store.exists(token):
+                try:
+                    self.collect_output(token)
+                except KeyError:
+                    continue
+            self.journal_payload(token)
+            staged.append(token)
+        return staged
+
     def token_size(self, token: str) -> int:
         """Size probe for schedulers/planners — called every tick, so it
         must use the counter-neutral ``ObjectStore.size`` probe (a ``get``

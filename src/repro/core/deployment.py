@@ -15,10 +15,19 @@ from __future__ import annotations
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Dict, List, Optional
+from typing import Dict, List, Optional, Protocol, runtime_checkable
 
 from repro.core.connector import Connector
 from repro.core.connectors import get_external_site, make_connector
+
+#: separator between a model's base name and an autoscaled replica ordinal
+#: ("compute~2" is the second extra replica site of model "compute")
+REPLICA_SEP = "~"
+
+
+def replica_base(model_name: str) -> str:
+    """Base model behind a (possibly autoscaled-replica) site name."""
+    return model_name.split(REPLICA_SEP, 1)[0]
 
 
 @dataclass
@@ -27,6 +36,47 @@ class ModelSpec:
     type: str
     config: dict = field(default_factory=dict)
     external: bool = False
+
+
+@runtime_checkable
+class DeploymentPlane(Protocol):
+    """THE deployment lifecycle API: one protocol for every site manager.
+
+    Both :class:`DeploymentManager` (the direct, per-run manager) and the
+    service's pooled per-run façade implement it, so anything driving
+    site lifecycle — the executor, the DataManager, the Autoscaler —
+    targets a single surface:
+
+      deploy / undeploy            bring a model up / tear it down
+      lease / release / lease_count  refcount pinning a site against idle
+                                   eviction (a real refcount on the
+                                   non-pooled manager too — deploy-if-
+                                   needed plus a count, otherwise a no-op)
+      maybe_undeploy_idle          grace-period eviction sweep
+      drain / undrain / is_draining  stop scheduling onto a site ahead of
+                                   a planned scale-down or preemption
+      replicas_of / spec_of        autoscaled replica sites of a model
+    """
+
+    def register(self, spec: ModelSpec) -> None: ...
+    def deploy(self, model_name: str) -> Connector: ...
+    def undeploy(self, model_name: str) -> None: ...
+    def undeploy_all(self) -> None: ...
+    def lease(self, model_name: str) -> Connector: ...
+    def release(self, model_name: str) -> None: ...
+    def lease_count(self, model_name: str) -> int: ...
+    def maybe_undeploy_idle(
+            self, pending_models: Optional[set] = None) -> List[str]: ...
+    def drain(self, model_name: str, *, preempt: bool = False) -> None: ...
+    def undrain(self, model_name: str) -> None: ...
+    def is_draining(self, model_name: str) -> bool: ...
+    def replicas_of(self, model_name: str) -> List[str]: ...
+    def spec_of(self, model_name: str) -> Optional[ModelSpec]: ...
+    def get_connector(self, model_name: str) -> Optional[Connector]: ...
+    def is_deployed(self, model_name: str) -> bool: ...
+    def job_started(self, model_name: str) -> None: ...
+    def job_finished(self, model_name: str) -> None: ...
+    def redeploy(self, model_name: str) -> Connector: ...
 
 
 @dataclass
@@ -51,6 +101,10 @@ class DeploymentManager:
         self.grace_period_s = grace_period_s
         self.journal = journal                    # ExecutionJournal | None
         self.timeline: List[tuple] = []           # (model, event, t)
+        # drain flags OUTLIVE the deployment entry: a preempted replica
+        # must stay unschedulable after its undeploy, or the executor's
+        # fault path would resurrect the very site the autoscaler revoked
+        self._draining: set = set()
 
     def _journal(self, model: str, event: str):
         if self.journal is not None:
@@ -59,6 +113,10 @@ class DeploymentManager:
     def register(self, spec: ModelSpec):
         with self._lock:
             self._specs[spec.name] = spec
+
+    def spec_of(self, model_name: str) -> Optional[ModelSpec]:
+        with self._lock:
+            return self._specs.get(model_name)
 
     # -- paper API ------------------------------------------------------------
     def deploy(self, model_name: str) -> Connector:
@@ -120,6 +178,42 @@ class DeploymentManager:
         with self._lock:
             dep = self.deployments_map.get(model_name)
             return dep.leases if dep is not None else 0
+
+    # -- drain layer (planned scale-down / preemption) -------------------------
+    def drain(self, model_name: str, *, preempt: bool = False):
+        """Raise a site's drain flag: schedulers and the executor stop
+        placing work onto it; the flag survives the eventual undeploy so
+        the fault path never redeploys a revoked site.  Journaled as a
+        *planned* ``drain`` (or ``preempt``) deployment event — a
+        replayed journal distinguishes it from a crash."""
+        with self._lock:
+            if model_name in self._draining:
+                return
+            self._draining.add(model_name)
+        self._journal(model_name, "preempt" if preempt else "drain")
+
+    def undrain(self, model_name: str):
+        with self._lock:
+            self._draining.discard(model_name)
+
+    def is_draining(self, model_name: str) -> bool:
+        with self._lock:
+            return model_name in self._draining
+
+    def draining_models(self) -> List[str]:
+        with self._lock:
+            return sorted(self._draining)
+
+    def replicas_of(self, model_name: str) -> List[str]:
+        """Deployed sites of a model: the base name plus every live
+        autoscaled replica ("m", "m~1", ...).  The base is always listed
+        (deployed or not — the executor deploys it lazily); replicas only
+        while they are actually up."""
+        base = replica_base(model_name)
+        with self._lock:
+            reps = sorted(n for n in self.deployments_map
+                          if n != base and replica_base(n) == base)
+        return [base, *reps]
 
     def undeploy(self, model_name: str):
         with self._lock:

@@ -59,6 +59,7 @@ from concurrent.futures import wait as futures_wait
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional, Tuple
 
+from repro.core.autoscale import AutoscaleConfig, Autoscaler
 from repro.core.connector import deserialize, serialize
 from repro.core.datamanager import DataManager
 from repro.core.deployment import DeploymentManager, ModelSpec
@@ -103,6 +104,11 @@ class RunResult:
     transfers: List
     deployment_timeline: List[tuple]
     wall_seconds: float
+    # work lost to planned preemption (attempts that died because their
+    # site was revoked mid-step): the autoscale benchmark's wasted-work
+    # ratio is wasted_seconds over total busy seconds
+    wasted_seconds: float = 0.0
+    wasted_invocations: int = 0
 
     def timeline_rows(self) -> List[tuple]:
         t0 = min((e.start for e in self.events), default=0.0)
@@ -161,7 +167,9 @@ class StreamFlowExecutor:
                  deployment=None,
                  scheduler=None,
                  namespace: str = "",
-                 cache=None):
+                 cache=None,
+                 autoscale=None,
+                 report_queue: bool = False):
         # deployment/scheduler: inject shared (service-owned) managers —
         # ``deployment`` may be a pooled lease façade; a shared
         # ``scheduler`` gives this run a true view of site occupancy
@@ -233,6 +241,23 @@ class StreamFlowExecutor:
                                 # the cache is on: `cache: off` runs keep
                                 # byte-identical transfer logs
                                 content_routing=self.cache is not None)
+        # autoscale: Autoscaler (service-shared) | AutoscaleConfig | raw
+        # ``autoscale:`` block dict | None.  None/absent == no autoscaler
+        # object at all == the exact static-pool behaviour (no queue
+        # reporting, no replica sites, byte-identical journals).
+        if isinstance(autoscale, dict):
+            autoscale = AutoscaleConfig.from_dict(autoscale)
+        if isinstance(autoscale, AutoscaleConfig):
+            autoscale = Autoscaler(autoscale, self.deployment,
+                                   self.scheduler, data=self.data,
+                                   topology=topology, journal=self.journal)
+        self.autoscaler: Optional[Autoscaler] = autoscale
+        # report_queue: push this run's unplaced backlog into the shared
+        # scheduler even without a run-local autoscaler (the service's
+        # pool-level autoscaler consumes it)
+        self._report_queue = report_queue or autoscale is not None
+        self._wasted_seconds = 0.0
+        self._wasted_invocations = 0
         self.fault = fault or FaultConfig()
         self.durations = DurationTracker()
         self.max_workers = max_workers
@@ -257,6 +282,7 @@ class StreamFlowExecutor:
         kw.setdefault("fault", FaultConfig.from_dict(cfg.fault))
         kw.setdefault("topology", cfg.topology or None)
         kw.setdefault("cache", cfg.cache or None)
+        kw.setdefault("autoscale", cfg.autoscale or None)
         return cls(cfg.models, **kw)
 
     # ------------------------------------------------------------------ utils
@@ -731,6 +757,8 @@ class StreamFlowExecutor:
         done_tokens = set(inputs) | set(pre_tokens or ())
         completed: set = set(pre_completed or ())
         self._memo_keys.clear()                # per-execution scratch state
+        self._wasted_seconds = 0.0
+        self._wasted_invocations = 0
         running: Dict[str, dict] = {}          # step path -> job record
         waiting: List[str] = []
         retries: List[dict] = []               # {rec, path, retry_at}
@@ -785,6 +813,15 @@ class StreamFlowExecutor:
                 # 3. schedule the queue (whole-queue batch when pipelined)
                 waiting = self._schedule_queue(
                     plan, bindings, waiting, running, pool)
+                # 3b. autoscaling: export the unplaced backlog as queue
+                #     pressure, then run one control iteration.  Entirely
+                #     absent without an autoscaler/service — the static
+                #     pool's scheduling is untouched.
+                if self._report_queue:
+                    self.scheduler.note_queue(
+                        self._queue_entries(waiting, bindings), ns=self._ns)
+                if self.autoscaler is not None:
+                    self.autoscaler.tick()
                 # 4. straggler speculation
                 if self.fault.speculative:
                     self._maybe_speculate(plan, bindings, running, pool)
@@ -877,7 +914,9 @@ class StreamFlowExecutor:
             result = RunResult(outputs, list(self.events),
                                list(self.data.transfers),
                                list(self.deployment.timeline),
-                               time.time() - t_start)
+                               time.time() - t_start,
+                               wasted_seconds=self._wasted_seconds,
+                               wasted_invocations=self._wasted_invocations)
             self._emit(WorkflowCompleted(workflow=plan.name,
                                          outputs=dict(outputs),
                                          result=result))
@@ -890,6 +929,10 @@ class StreamFlowExecutor:
             self.deployment.undeploy_all()      # paper §4.5 exception path
             raise
         finally:
+            if self.autoscaler is not None:
+                self.autoscaler.shutdown()
+            if self._report_queue:
+                self.scheduler.note_queue([], ns=self._ns)
             pool.shutdown(wait=False, cancel_futures=True)
             self.data.close()
             self.deployment.undeploy_all()
@@ -958,14 +1001,32 @@ class StreamFlowExecutor:
         """Resources an invocation may land on: the union over the
         binding's targets (deploying each lazily).  One target keeps the
         paper's behaviour; multiple targets are what lets one scatter
-        spread per-invocation across sites."""
+        spread per-invocation across sites.
+
+        Replica- and drain-aware: a target contributes every live
+        autoscaled replica site alongside its base, and draining sites
+        contribute nothing — retries and speculation route around a
+        revoked replica instead of resurrecting it.  With no autoscaler
+        the site list is exactly ``[model]`` and nothing drains, so the
+        static-pool resource pool is unchanged."""
         pool: List[str] = []
+        dep = self.deployment
+        replicas_of = getattr(dep, "replicas_of", None)
+        is_draining = getattr(dep, "is_draining", None)
         for model, service in binding.targets:
-            self._ensure_deployed(model)
-            conn = self.deployment.get_connector(model)
-            if conn is None:
-                continue
-            pool.extend(conn.get_available_resources(service))
+            sites = (replicas_of(model) if replicas_of is not None
+                     else [model])
+            for site in sites:
+                if is_draining is not None and is_draining(site):
+                    continue
+                if site == model:
+                    # replicas are deployed (and leased) by the
+                    # autoscaler; only the base deploys lazily here
+                    self._ensure_deployed(site)
+                conn = dep.get_connector(site)
+                if conn is None:
+                    continue
+                pool.extend(conn.get_available_resources(service))
         return pool
 
     def _placement_of(self, binding: Binding, resource: str
@@ -979,6 +1040,16 @@ class StreamFlowExecutor:
     def _strip_ns(self, job_name: str) -> str:
         """Scheduler job name back to the invocation path."""
         return job_name[len(self._ns):] if self._ns else job_name
+
+    def _queue_entries(self, waiting, bindings):
+        """The unplaced backlog as (job, service, candidate models)
+        triples — the autoscaler's queue-pressure input."""
+        entries = []
+        for p in waiting:
+            b = self._resolve_binding(p, bindings)
+            entries.append((self._sched_key(p), b.service,
+                            [m for m, _ in b.targets]))
+        return entries
 
     def _schedule_queue(self, plan, bindings, waiting, running, pool):
         if not waiting:
@@ -1147,6 +1218,28 @@ class StreamFlowExecutor:
                                       "duplicate", rec["speculative"]))
                 continue
             if err is None:
+                is_draining = getattr(self.deployment, "is_draining", None)
+                if (is_draining is not None and is_draining(model)
+                        and not self.deployment.is_deployed(model)):
+                    # completed on a site revoked mid-flight: the machine
+                    # (and every output it holds) is already gone, so the
+                    # result cannot be trusted — discard, drop its token
+                    # locations, and retry on a surviving site.  Planned
+                    # preemption never counts against the retry budget.
+                    self._wasted_seconds += now - rec["start"]
+                    self._wasted_invocations += 1
+                    self.data.drop_model(model)
+                    self.scheduler.forget_model(model)
+                    self.scheduler.notify(self._sched_key(key),
+                                          JobStatus.FAILED)
+                    self._record(JobEvent(path, model, rec["resource"],
+                                          rec["start"], now, rec["attempt"],
+                                          "preempted", rec["speculative"]))
+                    if rec["speculative"] or path in completed:
+                        continue
+                    retries.append({"rec": rec, "path": path,
+                                    "retry_at": now})
+                    continue
                 completed.add(path)
                 for token in step.outputs:
                     self.data.add_remote_path_mapping(
@@ -1204,13 +1297,23 @@ class StreamFlowExecutor:
             # site health check: dead site => redeploy + forget its tokens
             conn = self.deployment.get_connector(model)
             if conn is None or not conn.ping(rec["resource"]):
+                is_draining = getattr(self.deployment, "is_draining", None)
+                drained = is_draining is not None and is_draining(model)
                 self.data.drop_model(model)
                 self.scheduler.forget_model(model)
                 if self.cache is not None:
                     # the redeployed site comes back with empty stores:
                     # every cached location on it is now a lie
                     self.cache.drop_model(model)
-                self.deployment.redeploy(model)
+                if drained:
+                    # planned drain/preemption, not a crash: never
+                    # resurrect the revoked site — the retry routes to
+                    # surviving replicas via _avail_for.  The dead
+                    # attempt is the preemption's wasted work.
+                    self._wasted_seconds += now - rec["start"]
+                    self._wasted_invocations += 1
+                else:
+                    self.deployment.redeploy(model)
             delay = self.fault.backoff_s * (
                 self.fault.backoff_mult ** rec["attempt"])
             # defer instead of sleeping: backoff must not block dispatch of

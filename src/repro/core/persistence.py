@@ -116,7 +116,17 @@ class JournalState:
     # ``cancelled_pending`` invocations never completed — still resumable
     cancelled: bool = False
     cancelled_pending: List[str] = field(default_factory=list)
+    # sites revoked on purpose (planned drain/preempt); sticky across the
+    # teardown's own undeploy/drop_model records, cleared by a re-deploy
+    planned_drains: Set[str] = field(default_factory=set)
     dropped_tail_lines: int = 0
+
+    @property
+    def preempted_models(self) -> List[str]:
+        """Sites revoked by a planned ``preempt`` (or ``drain``) and never
+        re-deployed: resume must not re-place work onto them even if
+        their token locations verify."""
+        return sorted(self.planned_drains)
 
     def build_workflow(self):
         """Rebuild the Workflow from the journaled builder reference
@@ -315,12 +325,21 @@ class ExecutionJournal:
                     dst_resource=dst_resource, state=state, **fields)
 
     def deployment(self, model: str, event: str):
+        """Site lifecycle marker.  Beyond deploy/undeploy/attach/detach,
+        the autoscaler journals *planned* ``drain`` and ``preempt``
+        events, so a replayed journal can tell a revoked preemptible
+        site from a crash (older readers ignore unknown events)."""
         self.append("deployment", model=model, event=event)
 
     def drop_model(self, model: str):
         self.append("drop_model", model=model)
 
-    def scheduler_state(self, state: dict):
+    def scheduler_state(self, state):
+        """Journal a scheduler snapshot: accepts the raw dict or any
+        object with a ``to_dict()`` (``SchedulerSnapshot``)."""
+        to_dict = getattr(state, "to_dict", None)
+        if to_dict is not None:
+            state = to_dict()
         self.append("scheduler", state=state)
 
     def end_run(self, outputs: List[str]):
@@ -422,6 +441,10 @@ class ExecutionJournal:
                 st.transfers_inflight.discard(key)
         elif kind == "deployment":
             st.deployments[rec["model"]] = rec["event"]
+            if rec["event"] in ("preempt", "drain"):
+                st.planned_drains.add(rec["model"])
+            elif rec["event"] in ("deploy", "attach"):
+                st.planned_drains.discard(rec["model"])
         elif kind == "drop_model":
             st.deployments[rec["model"]] = "dropped"
             for token in list(st.token_locations):

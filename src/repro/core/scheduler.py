@@ -34,7 +34,7 @@ import abc
 import threading
 from dataclasses import dataclass, field
 from enum import Enum
-from typing import Dict, List, Optional, Sequence, Tuple
+from typing import Any, Dict, List, Optional, Sequence, Tuple
 
 from repro.core.workflow import Requirements
 
@@ -77,6 +77,50 @@ class ResourceAllocation:
 
 
 RemotePaths = Dict[str, List[Tuple[str, str]]]     # token -> [(resource, path)]
+
+
+@dataclass(frozen=True)
+class SchedulerSnapshot:
+    """Typed, immutable view of the scheduler's live state.
+
+    This is both the journal record (``to_dict()`` is exactly what
+    ``ExecutionJournal.scheduler_state`` writes — the historical raw-dict
+    shape is preserved key for key) and the Autoscaler's control input
+    (per-model/per-service queue depth, per-model running counts, drain
+    flags), so the scaling loop reasons over the same object a replayed
+    journal shows.
+    """
+    #: job name -> {"resource": ..., "status": ...}
+    jobs: Dict[str, Dict[str, str]]
+    #: resource name -> {"model": ..., "service": ..., "jobs": [...]}
+    resources: Dict[str, Dict[str, Any]]
+    #: model -> queued (placeable-but-unplaced) jobs naming it as a target
+    queue_depth: Dict[str, int] = field(default_factory=dict)
+    #: service -> queued jobs bound to it
+    service_queue_depth: Dict[str, int] = field(default_factory=dict)
+    #: model -> running job count
+    running: Dict[str, int] = field(default_factory=dict)
+    #: models currently draining (no new placements land on them)
+    draining: Tuple[str, ...] = ()
+
+    def to_dict(self) -> dict:
+        """JSON-safe form, journal-shape-compatible: the historical
+        ``{"jobs": ..., "resources": ...}`` keys are always present and
+        unchanged; queue/drain telemetry is added only when non-empty, so
+        runs without an autoscaler journal byte-identical records."""
+        out: dict = {"jobs": {n: dict(j) for n, j in self.jobs.items()},
+                     "resources": {n: dict(r)
+                                   for n, r in self.resources.items()}}
+        if self.queue_depth or self.service_queue_depth:
+            out["queue"] = {"models": dict(self.queue_depth),
+                            "services": dict(self.service_queue_depth)}
+        if self.draining:
+            out["draining"] = list(self.draining)
+        return out
+
+    def __getitem__(self, key: str):
+        # historical consumers indexed the raw export_state() dict
+        return self.to_dict()[key]
 
 
 def _loc_resource(loc) -> str:
@@ -412,6 +456,11 @@ class Scheduler:
         self.jobs: Dict[str, JobAllocation] = {}
         self.resources: Dict[str, ResourceAllocation] = {}
         self._lock = threading.RLock()
+        # job name -> (service, candidate model names): the still-unplaced
+        # queue, reported by the executor each tick (autoscaling runs only)
+        self._queued: Dict[str, Tuple[str, Tuple[str, ...]]] = {}
+        # models with the drain flag up: placement skips their resources
+        self._draining: set = set()
         self.topology = None
         if topology is not None:
             self.set_topology(topology)
@@ -439,11 +488,54 @@ class Scheduler:
                          if r.model == model]:
                 del self.resources[name]
 
+    # -- autoscaler control surface (queue depth + drain flags) ---------------
+    def note_queue(self, entries: Sequence[Tuple[str, str,
+                                                 Sequence[str]]],
+                   ns: str = ""):
+        """Report the still-unplaced ready queue: ``(job name, service,
+        candidate models)`` triples.  Replaces the previous report — the
+        executor calls this once per scheduling tick, so the snapshot's
+        queue depth is the live backlog, not an accumulation.  Under a
+        shared scheduler each run reports with its namespace prefix
+        (``ns``), replacing only its own entries."""
+        fresh = {name: (service, tuple(models))
+                 for name, service, models in entries}
+        with self._lock:
+            if ns:
+                for k in [k for k in self._queued if k.startswith(ns)]:
+                    del self._queued[k]
+                self._queued.update(fresh)
+            else:
+                self._queued = fresh
+
+    def set_draining(self, model: str, draining: bool = True):
+        """Raise/clear a model's drain flag: a draining model's resources
+        take no new placements (retries and speculation included)."""
+        with self._lock:
+            if draining:
+                self._draining.add(model)
+            else:
+                self._draining.discard(model)
+
+    def is_draining(self, model: str) -> bool:
+        with self._lock:
+            return model in self._draining
+
+    def _usable(self, available: Sequence[str]) -> Sequence[str]:
+        """Filter a candidate resource list through the drain flags (the
+        no-drain fast path returns the input untouched)."""
+        if not self._draining:
+            return available
+        return [r for r in available
+                if (self.resources.get(r) is None
+                    or self.resources[r].model not in self._draining)]
+
     def schedule(self, job: JobDescription, available: Sequence[str],
                  remote_paths: RemotePaths) -> Optional[str]:
         with self._lock:
             resource = self.policy.get_resource(
-                job, available, remote_paths, self.jobs, self.resources)
+                job, self._usable(available), remote_paths, self.jobs,
+                self.resources)
             if resource is None:
                 return None
             self.jobs[job.name] = JobAllocation(job, resource)
@@ -471,6 +563,9 @@ class Scheduler:
         call.  Returns committed (job, resource) pairs; unplaced jobs
         simply stay in the executor's waiting queue."""
         with self._lock:
+            if self._draining:
+                available = {name: self._usable(res)
+                             for name, res in available.items()}
             select = getattr(self.policy, "select_batch", None)
             if select is not None:
                 picked = select(list(queue), available, remote_paths,
@@ -507,10 +602,12 @@ class Scheduler:
                 if res and job_name in res.jobs:
                     res.jobs.remove(job_name)
 
-    def export_state(self, running_only: bool = False) -> dict:
-        """JSON-safe snapshot of job allocations + resource occupancy —
-        journaled by the executor so a crashed driver's scheduling state is
-        inspectable.  ``running_only`` drops finished allocations, bounding
+    def export_state(self, running_only: bool = False) -> SchedulerSnapshot:
+        """Typed snapshot of job allocations + resource occupancy —
+        ``.to_dict()`` is journaled by the executor so a crashed driver's
+        scheduling state is inspectable, and the same object is the
+        Autoscaler's control input (queue depth, running counts, drain
+        flags).  ``running_only`` drops finished allocations, bounding
         the snapshot by scheduling width instead of workflow length (the
         executor journals one snapshot per completion, so the full history
         would make the journal grow quadratically)."""
@@ -518,12 +615,26 @@ class Scheduler:
             jobs = {name: {"resource": a.resource, "status": a.status.value}
                     for name, a in self.jobs.items()
                     if not running_only or a.status is JobStatus.RUNNING}
-            return {
-                "jobs": jobs,
-                "resources": {name: {"model": r.model, "service": r.service,
-                                     "jobs": list(r.jobs)}
-                              for name, r in self.resources.items()},
-            }
+            resources = {name: {"model": r.model, "service": r.service,
+                                "jobs": list(r.jobs)}
+                         for name, r in self.resources.items()}
+            queue_depth: Dict[str, int] = {}
+            service_depth: Dict[str, int] = {}
+            for _name, (service, models) in self._queued.items():
+                service_depth[service] = service_depth.get(service, 0) + 1
+                for m in models:
+                    queue_depth[m] = queue_depth.get(m, 0) + 1
+            running: Dict[str, int] = {}
+            for a in self.jobs.values():
+                if a.status is not JobStatus.RUNNING:
+                    continue
+                res = self.resources.get(a.resource)
+                if res is not None:
+                    running[res.model] = running.get(res.model, 0) + 1
+            return SchedulerSnapshot(
+                jobs=jobs, resources=resources, queue_depth=queue_depth,
+                service_queue_depth=service_depth, running=running,
+                draining=tuple(sorted(self._draining)))
 
     def has_running(self) -> bool:
         """Any allocation still RUNNING, across every run sharing this

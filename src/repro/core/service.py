@@ -40,9 +40,11 @@ from __future__ import annotations
 import itertools
 import threading
 import time
+import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
+from repro.core.autoscale import AutoscaleConfig, Autoscaler
 from repro.core.deployment import DeploymentManager, ModelSpec
 from repro.core.events import EventSink, WorkflowCancelled
 from repro.core.executor import RunResult, StreamFlowExecutor
@@ -127,8 +129,18 @@ class DeploymentPool:
     def lease_manager(self) -> "PooledDeploymentManager":
         return PooledDeploymentManager(self)
 
-    def evict_idle(self, pending_models: Optional[set] = None) -> List[str]:
+    def maybe_undeploy_idle(self, pending_models: Optional[set] = None
+                            ) -> List[str]:
+        """Idle keep-alive sweep (the DeploymentPlane spelling)."""
         return self.manager.maybe_undeploy_idle(pending_models)
+
+    def evict_idle(self, pending_models: Optional[set] = None) -> List[str]:
+        """Deprecated spelling of :meth:`maybe_undeploy_idle`."""
+        warnings.warn(
+            "DeploymentPool.evict_idle is deprecated; use "
+            "maybe_undeploy_idle (the DeploymentPlane spelling)",
+            DeprecationWarning, stacklevel=2)
+        return self.maybe_undeploy_idle(pending_models)
 
     @property
     def deploy_count(self) -> int:
@@ -184,18 +196,42 @@ class PooledDeploymentManager:
             leased = list(self._leased)
         for model in leased:
             self.undeploy(model)
-        self._pool.evict_idle()
+        self._pool.maybe_undeploy_idle()
 
     def maybe_undeploy_idle(self, pending_models: Optional[set] = None
                             ) -> List[str]:
         # pool-level eviction: only models NO run leases can go; the
         # executor then forgets them from its per-run scheduler/registry
-        return self._pool.evict_idle(pending_models)
+        return self._pool.maybe_undeploy_idle(pending_models)
 
     def redeploy(self, model_name: str):
         return self._inner.redeploy(model_name)
 
-    # -- passthroughs --------------------------------------------------------
+    # -- passthroughs (the rest of the DeploymentPlane surface) ---------------
+    def lease(self, model_name: str):
+        return self._inner.lease(model_name)
+
+    def release(self, model_name: str):
+        self._inner.release(model_name)
+
+    def lease_count(self, model_name: str) -> int:
+        return self._inner.lease_count(model_name)
+
+    def drain(self, model_name: str, *, preempt: bool = False):
+        self._inner.drain(model_name, preempt=preempt)
+
+    def undrain(self, model_name: str):
+        self._inner.undrain(model_name)
+
+    def is_draining(self, model_name: str) -> bool:
+        return self._inner.is_draining(model_name)
+
+    def replicas_of(self, model_name: str) -> List[str]:
+        return self._inner.replicas_of(model_name)
+
+    def spec_of(self, model_name: str) -> Optional[ModelSpec]:
+        return self._inner.spec_of(model_name)
+
     def register(self, spec: ModelSpec):
         self._inner.register(spec)
 
@@ -270,7 +306,8 @@ class WorkflowService:
     typically a ``WorkflowEntry``'s fields."""
 
     def __init__(self, models, *, service: Optional[ServiceConfig] = None,
-                 policy: Optional[str] = None, cache=None, **executor_kw):
+                 policy: Optional[str] = None, cache=None, autoscale=None,
+                 **executor_kw):
         if isinstance(models, StreamFlowConfig):
             cfg = models
             models = cfg.models
@@ -280,6 +317,8 @@ class WorkflowService:
                 policy = cfg.policy
             if cache is None:
                 cache = cfg.cache or None
+            if autoscale is None:
+                autoscale = cfg.autoscale or None
         self.config = service or ServiceConfig()
         # cross-run invocation cache (the ``cache:`` block).  scope=service
         # opens ONE shared index handed to every admitted executor, so
@@ -309,11 +348,43 @@ class WorkflowService:
         self.scheduler: Optional[Scheduler] = (
             Scheduler(POLICIES[self._policy]())
             if self.pool is not None else None)
+        # pool-level autoscaler (the ``autoscale:`` block): ONE control
+        # loop over the shared manager + shared scheduler, fed by every
+        # admitted run's queue report (namespaced note_queue).  Per-tenant
+        # ``max_active`` quotas bound its control input — a tenant at
+        # quota can't inflate queue depth and force scale-ups — and
+        # ``max_total_replicas`` caps the fleet outright.  Requires the
+        # pool (an unpooled service has per-run managers, where the
+        # executor-level autoscaler applies instead).
+        if isinstance(autoscale, dict):
+            autoscale = AutoscaleConfig.from_dict(autoscale)
+        self.autoscaler: Optional[Autoscaler] = None
+        self._scaler_stop = threading.Event()
+        self._scaler_thread: Optional[threading.Thread] = None
+        if isinstance(autoscale, AutoscaleConfig) and self.pool is not None:
+            self.autoscaler = Autoscaler(
+                autoscale, self.pool.manager, self.scheduler,
+                topology=executor_kw.get("topology")
+                if not isinstance(executor_kw.get("topology"), dict)
+                else None)
+            self._scaler_thread = threading.Thread(
+                target=self._scaler_loop, daemon=True, name="sf-autoscaler")
+            self._scaler_thread.start()
         self._lock = threading.RLock()
         self._runs: Dict[str, Run] = {}
         self._seq = itertools.count()
         self._active = 0
         self._closed = False
+
+    def _scaler_loop(self):
+        interval = self.autoscaler.config.interval_s
+        while not self._scaler_stop.wait(interval):
+            try:
+                self.autoscaler.tick()
+            except Exception:                 # noqa: BLE001 — control loop
+                # a failed control iteration must not kill the service;
+                # the next tick sees fresh state and tries again
+                pass
 
     # -- submit --------------------------------------------------------------
     def submit(self, workflow, bindings, inputs=None, *,
@@ -420,11 +491,18 @@ class WorkflowService:
             kw["deployment"] = self.pool.lease_manager()
             kw["scheduler"] = self.scheduler
             kw["namespace"] = f"{run.id}/"
+        if self.autoscaler is not None:
+            # the service owns the ONE control loop; runs just feed it
+            # queue pressure and expose their data planes for stage-off
+            kw["autoscale"] = None
+            kw["report_queue"] = True
         if self.cache is not None:
             kw.setdefault("cache", self.cache)
         elif self._cache_cfg is not None:
             kw.setdefault("cache", self._cache_cfg)
         run.executor = StreamFlowExecutor(self._models, **kw)
+        if self.autoscaler is not None:
+            self.autoscaler.attach_data(run.executor.data)
         if run.sink is not None:
             run.stream = run.executor.run_stream(
                 run.workflow, run.bindings, run.inputs, run.collect,
@@ -458,8 +536,10 @@ class WorkflowService:
             self._active -= 1
             run.done.set()
             self._pump_locked()
+        if self.autoscaler is not None and run.executor is not None:
+            self.autoscaler.detach_data(run.executor.data)
         if self.pool is not None:
-            self.pool.evict_idle()
+            self.pool.maybe_undeploy_idle()
 
     # -- TES API --------------------------------------------------------------
     def _run(self, run_id: str) -> Run:
@@ -558,6 +638,11 @@ class WorkflowService:
             for rid in pending:
                 self.cancel(rid)
         self.drain(timeout)
+        if self.autoscaler is not None:
+            self._scaler_stop.set()
+            if self._scaler_thread is not None:
+                self._scaler_thread.join(timeout=5.0)
+            self.autoscaler.shutdown()
         if self.pool is not None:
             self.pool.shutdown()
         if self.cache is not None:

@@ -79,6 +79,10 @@ class StreamFlowConfig:
     # parsed ``tools:`` block (declarative frontend) — kept for
     # introspection; workflows already compiled against it
     tools: Dict[str, Any] = field(default_factory=dict)
+    # the ``autoscale:`` block — per-model replica envelopes, pressure
+    # targets, cooldown, spot (``preemptible``) semantics.  Absent/empty
+    # means no Autoscaler object at all: the exact static-pool behaviour
+    autoscale: Dict[str, Any] = field(default_factory=dict)
 
 
 def _check(cond: bool, msg: str):
@@ -359,6 +363,10 @@ def load(path_or_doc, *, check: Optional[bool] = None) -> StreamFlowConfig:
         _check(bool(cache["index_path"]),
                "cache.index_path must be non-empty")
 
+    autoscale = doc.get("autoscale", {})
+    if checking and autoscale:
+        _checker.check_autoscale(autoscale, models, collector)
+
     topology = doc.get("topology", {})
     for i, link in enumerate(topology.get("links", [])):
         for end in ("source", "target"):
@@ -382,4 +390,5 @@ def load(path_or_doc, *, check: Optional[bool] = None) -> StreamFlowConfig:
         topology=topology,
         service=doc.get("service", {}),
         cache=cache,
-        tools=tools)
+        tools=tools,
+        autoscale=autoscale)

@@ -125,6 +125,23 @@ class TopologyGraph:
                                                      bandwidth_mbps)
         self._route_cache.clear()
 
+    def clone_site(self, base: str, name: str):
+        """Register ``name`` with the same links as ``base``: autoscaled
+        replica sites inherit the base's position in the cost model, so
+        the locality policy and the transfer planner score a replica
+        exactly like the site it clones."""
+        up = self.mgmt_link(base, outbound=True)
+        self.add_site(name, mgmt_latency_s=up.latency_s,
+                      mgmt_bandwidth_mbps=up.bandwidth_mbps)
+        for (a, b), l in list(self._links.items()):
+            if a == base and b not in (MANAGEMENT, name):
+                self._links[(name, b)] = LinkSpec(name, b, l.latency_s,
+                                                  l.bandwidth_mbps)
+            elif b == base and a not in (MANAGEMENT, name):
+                self._links[(a, name)] = LinkSpec(a, name, l.latency_s,
+                                                  l.bandwidth_mbps)
+        self._route_cache.clear()
+
     @classmethod
     def from_config(cls, models: Dict[str, object],
                     doc: Optional[dict] = None) -> "TopologyGraph":

@@ -19,7 +19,8 @@ def _bench(*, serial=1.0, piped=0.5, scratch=3.0, resumed=1.0,
            tput_pooled=140.0, tput_perrun=100.0,
            p99_pooled=0.03, p99_perrun=0.6,
            mk_cold=2.0, mk_warm=0.1, bytes_cold=1_000_000, bytes_warm=40,
-           warm_memoized=34, warm_invocations=34):
+           warm_memoized=34, warm_invocations=34,
+           mk_static=0.8, mk_elastic=0.26, wasted=2, useful=16):
     return {"results": {
         "pipeline_makespan": [
             {"topology": "fig9", "mode": "serialized-fcfs",
@@ -61,6 +62,14 @@ def _bench(*, serial=1.0, piped=0.5, scratch=3.0, resumed=1.0,
              "memoized": warm_memoized, "makespan_s": mk_warm,
              "transfer_bytes": bytes_warm},
         ],
+        "autoscale_elasticity": [
+            {"mode": "static", "makespan_s": mk_static,
+             "useful_invocations": useful, "wasted_invocations": 0},
+            {"mode": "elastic", "makespan_s": mk_elastic,
+             "useful_invocations": useful, "wasted_invocations": 0},
+            {"mode": "preempted", "makespan_s": mk_elastic,
+             "useful_invocations": useful, "wasted_invocations": wasted},
+        ],
     }}
 
 
@@ -80,6 +89,8 @@ def test_extract_metrics():
     assert m["cache_warm_makespan_ratio"] == pytest.approx(0.05)
     assert m["cache_bytes_ratio"] == pytest.approx(4e-05)
     assert m["cache_hit_rate"] == pytest.approx(1.0)
+    assert m["autoscale_makespan_ratio"] == pytest.approx(0.325)
+    assert m["autoscale_wasted_work_ratio"] == pytest.approx(0.125)
 
 
 def _run(tmp_path, bench, baseline_bench=None, argv_extra=()):
@@ -173,6 +184,21 @@ def test_gate_fails_when_memoization_stops_saving_time(tmp_path, capsys):
     # warm makespan back at the cold level (hard ceiling 0.5)
     assert _run(tmp_path, _bench(mk_warm=1.9)) == 1
     assert "cache_warm_makespan_ratio" in capsys.readouterr().out
+
+
+def test_gate_fails_when_elasticity_stops_helping(tmp_path, capsys):
+    # elastic makespan back at the static control's (hard ceiling 0.80)
+    assert _run(tmp_path, _bench(mk_elastic=0.78)) == 1
+    out = capsys.readouterr().out
+    assert "autoscale_makespan_ratio" in out and "hard bound" in out
+
+
+def test_gate_fails_when_preemption_waste_explodes(tmp_path, capsys):
+    # revocations burning more than half an attempt per useful
+    # invocation (hard ceiling 0.5)
+    assert _run(tmp_path, _bench(wasted=9)) == 1
+    out = capsys.readouterr().out
+    assert "autoscale_wasted_work_ratio" in out and "hard bound" in out
 
 
 def test_gate_fails_on_missing_benchmark_section(tmp_path, capsys):

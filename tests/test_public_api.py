@@ -11,6 +11,9 @@ import repro.core as core
 # Keep sorted.  Update ONLY together with an intentional, documented
 # change to the public API.
 EXPECTED = [
+    "AutoscaleConfig",
+    "AutoscalePolicy",
+    "Autoscaler",
     "BackfillPolicy",
     "Binding",
     "CANCELED",
@@ -24,6 +27,7 @@ EXPECTED = [
     "DataManager",
     "DataRef",
     "DeploymentManager",
+    "DeploymentPlane",
     "DeploymentPool",
     "Diagnostic",
     "DurationTracker",
@@ -68,6 +72,7 @@ EXPECTED = [
     "RunResult",
     "ScatterSpreadPolicy",
     "Scheduler",
+    "SchedulerSnapshot",
     "ServiceConfig",
     "ServiceError",
     "SimClusterConnector",
@@ -107,6 +112,7 @@ EXPECTED = [
     "match_binding",
     "parse_token_ref",
     "parse_tools",
+    "replica_base",
     "serialize",
     "start_external_site",
     "stop_external_site",
