@@ -1,0 +1,91 @@
+"""Static cost prediction (SF3xx analyzer) vs measured makespan.
+
+The analyzer's cost engine promises a *lower bound*: with per-step cost
+estimates that are themselves not overestimates, the predicted
+``makespan_lower_bound_s`` never exceeds what a real run measures.  This
+bench closes the loop on the two §5 expressions of the hybrid pipeline
+(the hand-unrolled Fig. 9 document and its scatter twin, the exact docs
+bench_scatter races):
+
+1. run the document and measure the timeline span;
+2. calibrate per-declared-step costs from that run — the MINIMUM
+   invocation duration per declared step, an optimistic per-step cost by
+   construction, so machine speed cancels out of the comparison;
+3. feed those costs to ``analyzer.analyze`` and compare its predicted
+   lower bound against the measured span.
+
+``benchmarks/compare.py`` gates CI on the bracket both ways: predicted
+<= measured (soundness — the bound is real) and measured <= 3x predicted
+(tightness — the prediction is close enough to be useful for placement
+decisions, not a vacuous zero).
+"""
+from __future__ import annotations
+
+from benchmarks.bench_scatter import _doc_scatter, _doc_unrolled
+from benchmarks.common import run_doc, warmup
+from repro.core import load_streamflow_file
+from repro.core.analyzer import analyze
+
+
+def _calibrated_costs(rows) -> dict:
+    """Declared step path -> min completed invocation duration (s)."""
+    costs: dict = {}
+    for step, _resource, t0, t1, status, _attempt, _spec in rows:
+        if not status.startswith("completed"):
+            continue
+        declared = step.split("@")[0]
+        dur = max(t1 - t0, 0.0)
+        if declared not in costs or dur < costs[declared]:
+            costs[declared] = dur
+    return costs
+
+
+def _one(mode: str) -> dict:
+    doc = _doc_scatter() if mode == "scatter" else _doc_unrolled()
+    cfg = load_streamflow_file(doc)
+    _ex, res, _wall = run_doc(doc)
+    rows = res.timeline_rows()
+    measured = max(r[3] for r in rows) - min(r[2] for r in rows)
+
+    report = analyze(cfg, step_costs=_calibrated_costs(rows),
+                     default_cost_s=0.0)
+    wname = next(iter(cfg.workflows))
+    cost = report.cost[wname]
+    predicted = cost["makespan_lower_bound_s"]
+    return {"mode": mode,
+            "invocations": cost["n_invocations"],
+            "errors": len(report.errors()),
+            "warnings": len(report.warnings()),
+            "predicted_lb_s": round(predicted, 4),
+            "critical_path_s": round(cost["critical_path_s"], 4),
+            "total_work_s": round(cost["total_work_s"], 4),
+            "max_parallel_slots": cost["max_parallel_slots"],
+            "measured_s": round(measured, 4),
+            "ratio": round(measured / max(predicted, 1e-9), 4)}
+
+
+def _median(runs):
+    runs = sorted(runs, key=lambda r: r["ratio"])
+    return runs[len(runs) // 2]
+
+
+def run(verbose=True, repeats: int = 3):
+    warmup()
+    acc = {"hand-unrolled": [], "scatter": []}
+    for _ in range(repeats):
+        for mode in acc:                  # interleave against CPU drift
+            acc[mode].append(_one(mode))
+    rows = [_median(runs) for runs in acc.values()]
+
+    if verbose:
+        hdr = ["mode", "invocations", "predicted_lb_s", "critical_path_s",
+               "total_work_s", "max_parallel_slots", "measured_s", "ratio"]
+        print(" | ".join(f"{h:>17s}" for h in hdr))
+        for r in rows:
+            print(" | ".join(f"{str(r[h]):>17s}" for h in hdr))
+        for r in rows:
+            print(f"[claim] {r['mode']}: predicted lower bound "
+                  f"{r['predicted_lb_s']:.3f}s <= measured "
+                  f"{r['measured_s']:.3f}s <= 3x prediction "
+                  f"(ratio {r['ratio']:.2f}x)")
+    return rows

@@ -177,6 +177,23 @@ def _autoscale_wasted_work_ratio(results: dict) -> float:
             / max(by["preempted"]["useful_invocations"], 1))
 
 
+def _analyze_lb_ratio_unrolled(results: dict) -> float:
+    """Measured over statically predicted makespan on the hand-unrolled
+    Fig. 9 hybrid — the PR-10 bracket: >= 1 means the analyzer's lower
+    bound is sound (it never promised more than the run delivered), <= 3
+    means the prediction is tight enough to rank placements with."""
+    by = _rows_by(results, "analyze_prediction", "mode")
+    return by["hand-unrolled"]["ratio"]
+
+
+def _analyze_lb_ratio_scatter(results: dict) -> float:
+    """The same bracket on the scatter expression of the pipeline, where
+    the analyzer must reason through scatter widths and the joint slot
+    bound instead of a step-per-chain DAG."""
+    by = _rows_by(results, "analyze_prediction", "mode")
+    return by["scatter"]["ratio"]
+
+
 def _cache_hit_rate(results: dict) -> float:
     """Share of the warm run's invocations satisfied from the cache —
     deterministic (same workflow, same inputs, live pooled sites); below
@@ -275,6 +292,15 @@ METRICS = [
     # attempt per useful invocation
     Metric("autoscale_wasted_work_ratio", _autoscale_wasted_work_ratio,
            higher_is_better=False, rel_tol=1.0, hard_max=0.5),
+    # measured/predicted makespan: the hard bounds ARE the claim (sound
+    # lower bound, usefully tight); the ratio is self-normalizing because
+    # the per-step costs are calibrated from the very run being measured
+    Metric("analyze_lb_ratio_unrolled", _analyze_lb_ratio_unrolled,
+           higher_is_better=False, rel_tol=0.8, hard_min=1.0,
+           hard_max=3.0),
+    Metric("analyze_lb_ratio_scatter", _analyze_lb_ratio_scatter,
+           higher_is_better=False, rel_tol=0.8, hard_min=1.0,
+           hard_max=3.0),
 ]
 
 

@@ -23,10 +23,11 @@ def _timed(fn, *a, **kw):
 
 
 def _sections():
-    from benchmarks import (bench_autoscale, bench_cache, bench_deployment,
-                            bench_fault, bench_pipeline, bench_recovery,
-                            bench_routing, bench_scatter, bench_scheduler,
-                            bench_service, bench_timeline, bench_transfer)
+    from benchmarks import (bench_analyze, bench_autoscale, bench_cache,
+                            bench_deployment, bench_fault, bench_pipeline,
+                            bench_recovery, bench_routing, bench_scatter,
+                            bench_scheduler, bench_service, bench_timeline,
+                            bench_transfer)
 
     def timeline():
         out, us = _timed(bench_timeline.run, "both")
@@ -106,6 +107,16 @@ def _sections():
                          f"wasted={by['preempted']['wasted_invocations']}"
                          f"/{by['preempted']['useful_invocations']}")
 
+    def analyze():
+        out, us = _timed(bench_analyze.run)
+        by = {r["mode"]: r for r in out}
+        return out, us, (f"unrolled={by['hand-unrolled']['predicted_lb_s']}s"
+                         f"<={by['hand-unrolled']['measured_s']}s"
+                         f"({by['hand-unrolled']['ratio']}x);"
+                         f"scatter={by['scatter']['predicted_lb_s']}s"
+                         f"<={by['scatter']['measured_s']}s"
+                         f"({by['scatter']['ratio']}x)")
+
     def scatter():
         out, us = _timed(bench_scatter.run)
         by = {r["mode"]: r for r in out}
@@ -132,6 +143,8 @@ def _sections():
          "routing vs the R3 two-step baseline", routing),
         ("scatter_width", "bench_scatter — N-sample scatter vs the "
          "hand-unrolled control", scatter),
+        ("analyze_prediction", "bench_analyze — static makespan lower "
+         "bound vs measured (SF3xx cost engine)", analyze),
         ("service_multitenant", "bench_service — pooled vs per-run "
          "deployments under bursty multi-tenant load", service),
         ("cache_memoization", "bench_cache — cross-run invocation "

@@ -103,6 +103,48 @@ class AutoscaleConfig:
                    models=models)
 
 
+@dataclass(frozen=True)
+class ScaleEnvelope:
+    """Static upper bound on concurrently-live sites — what the plan-time
+    analyzer charges a scatter group against.  ``per_model`` maps a base
+    model to its maximum live sites (base + extras, ``>= 1``);
+    ``max_total_extras`` is the global ``max_total_replicas`` cap on
+    extra replicas across every model (None = uncapped)."""
+    per_model: Dict[str, int]
+    max_total_extras: Optional[int]
+
+    def max_sites(self, models) -> int:
+        """Most sites the named model group can ever have live at once:
+        one base each, plus per-model extra headroom, jointly capped by
+        ``max_total_replicas`` (extras are a shared budget, so the bound
+        assumes the whole budget could serve this group)."""
+        names = list(dict.fromkeys(models))
+        extras = sum(self.per_model.get(m, 1) - 1 for m in names)
+        if self.max_total_extras is not None:
+            extras = min(extras, self.max_total_extras)
+        return len(names) + extras
+
+
+def scale_envelope(block: Any, models: Optional[Dict[str, Any]] = None
+                   ) -> ScaleEnvelope:
+    """Export the ``autoscale:`` block's replica envelope without building
+    an Autoscaler.  An absent/disabled block yields the static-pool
+    envelope (every model pinned at 1 site, zero extras); an external
+    (user-managed) model never scales regardless of its declared ``max``
+    — ``scale_up`` refuses to clone capacity the engine does not own."""
+    cfg = AutoscaleConfig.from_dict(block if isinstance(block, dict)
+                                    else None)
+    if cfg is None:
+        return ScaleEnvelope(per_model={}, max_total_extras=0)
+    per: Dict[str, int] = {}
+    for name, pol in cfg.models.items():
+        spec = (models or {}).get(name)
+        external = bool(getattr(spec, "external", False))
+        per[name] = 1 if external else max(pol.max, 1)
+    return ScaleEnvelope(per_model=per,
+                         max_total_extras=cfg.max_total_replicas)
+
+
 class Autoscaler:
     """Drives replica counts from scheduler snapshots.
 
@@ -125,10 +167,10 @@ class Autoscaler:
         # every DataManager whose tokens might live on a replica we own
         # (one in executor mode; one per active run in service mode)
         self._data_planes: List[Any] = [data] if data is not None else []
-        self._replicas: Dict[str, List[str]] = {}   # base -> live extras
-        self._ordinal: Dict[str, int] = {}          # base -> next suffix
-        self._draining: Dict[str, bool] = {}        # site -> preempted?
-        self._last_action: Dict[str, float] = {}    # base -> monotonic t
+        self._replicas: Dict[str, List[str]] = {}   # lock: _lock; base -> live extras
+        self._ordinal: Dict[str, int] = {}          # lock: _lock; base -> next suffix
+        self._draining: Dict[str, bool] = {}        # lock: _lock; site -> preempted?
+        self._last_action: Dict[str, float] = {}    # lock: _lock; base -> monotonic t
         # stats (benchmarks + tests read these)
         self.scale_up_events = 0
         self.scale_down_events = 0
@@ -172,7 +214,8 @@ class Autoscaler:
         return snap
 
     def _cooldown_ok(self, base: str) -> bool:
-        last = self._last_action.get(base)
+        with self._lock:
+            last = self._last_action.get(base)
         return last is None or \
             time.monotonic() - last >= self.config.cooldown_s
 

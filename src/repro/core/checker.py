@@ -43,6 +43,7 @@ SF133   scattered slots zip streams of different widths
 SF134   slot declared in both scatter and gather
 SF135   invalid stream declaration (unknown port / bad width)
 SF140   invalid step path
+SF150   document declares no workflows (missing/empty section)
 SF200   malformed binding target (none, or both target and targets)
 SF201   binding references an undeclared model
 SF202   binding references a service the model does not declare
@@ -98,6 +99,7 @@ CODES: Dict[str, str] = {
     "SF134": "scatter-gather-overlap",
     "SF135": "invalid-stream-declaration",
     "SF140": "invalid-step-path",
+    "SF150": "no-workflows-declared",
     "SF200": "invalid-binding-target",
     "SF201": "unknown-binding-model",
     "SF202": "unknown-binding-service",
@@ -225,6 +227,24 @@ def service_capabilities(spec: ModelSpec) -> Dict[str, Requirements]:
         out[svc] = Requirements(cores=int(scfg.get("cores", cores_d)),
                                 memory_gb=float(scfg.get("memory_gb", mem_d)))
     return out
+
+
+def service_slots(spec: ModelSpec) -> Dict[str, int]:
+    """How many resources each service of a model deploys, statically:
+    service name -> replica count, following the same ``replicas``
+    convention every Connector applies at ``deploy()`` (default 1;
+    ``replicas: 0`` legally deploys an empty service — the analyzer's
+    zero-slot wedge vector).  Simcluster delegates to its inner
+    connector, like :func:`service_capabilities`."""
+    cfg = spec.config or {}
+    if spec.type == "simcluster":
+        inner = cfg.get("inner", {"type": "local", "config": {}})
+        return service_slots(ModelSpec(
+            spec.name, inner.get("type", "local"),
+            inner.get("config", {}) or {}))
+    services = cfg.get("services") or {"default": {"replicas": 1}}
+    return {svc: int((scfg or {}).get("replicas", 1))
+            for svc, scfg in services.items()}
 
 
 # ---------------------------------------------------------------------------

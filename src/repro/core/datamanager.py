@@ -48,7 +48,8 @@ from typing import Any, Dict, List, Optional, Tuple, Union
 
 from repro.core.connector import (Connector, ConnectorCopyKind, ObjectStore,
                                   deserialize, serialize)
-from repro.core.topology import MANAGEMENT, Route, TopologyGraph
+from repro.core.topology import (MANAGEMENT, Route, TopologyGraph,
+                                 UnroutableError)
 from repro.core.workflow import parse_token_ref
 
 
@@ -353,7 +354,7 @@ class DataManager:
         # rank-only, which reproduces the paper's source pick exactly:
         # sibling replica, then first registered replica, then the
         # management node only when no replica exists
-        use_costs = topo is not None and topo.routing == "direct"
+        use_costs = topo is not None and topo.routing in ("direct", "strict")
         # (cost, preference-rank, insertion-order) -> plan; ranks keep the
         # paper's tie-break order under the free-link default topology
         scored: List[Tuple[Tuple[float, int, int], RoutePlan]] = []
@@ -362,7 +363,10 @@ class DataManager:
                 scored.append(((0.0, 0, i),
                                RoutePlan("intra-model", 0.0, loc)))
             elif use_costs:
-                route = topo.route(loc.model, dst_model, size)
+                try:
+                    route = topo.route(loc.model, dst_model, size)
+                except UnroutableError:
+                    continue     # strict: this replica's site can't reach dst
                 kind = ("direct" if route.hops
                         and not route.via_management else "two-step")
                 scored.append(((route.cost, 1, i),
@@ -385,6 +389,11 @@ class DataManager:
             scored.append(((cost if use_costs else 0.0, 2, 0),
                            RoutePlan("mgmt-push", cost, None, route)))
         if not scored:
+            if live and topo is not None and topo.routing == "strict":
+                raise UnroutableError(
+                    f"token {token!r} lives on "
+                    f"{sorted({l.model for l in live})} but no declared "
+                    f"direct link reaches {dst_model} (routing: strict)")
             raise KeyError(f"token {token!r} exists nowhere (or every "
                            f"replica's site is dead)")
         return min(scored, key=lambda kv: kv[0])[1]
@@ -397,7 +406,8 @@ class DataManager:
         if self.has_replica(token, dst_model):
             return 0.0
         size = max(self.token_size(token), 1)
-        if self.topology is None or self.topology.routing != "direct":
+        if self.topology is None \
+                or self.topology.routing not in ("direct", "strict"):
             return float(size)
         with self._lock:
             sources = {l.model for l in self.remote_paths.get(token, [])}

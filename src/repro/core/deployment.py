@@ -95,16 +95,16 @@ class _Deployment:
 class DeploymentManager:
     def __init__(self, model_specs: Dict[str, ModelSpec], *,
                  grace_period_s: Optional[float] = None, journal=None):
-        self._specs = dict(model_specs)
+        self._specs = dict(model_specs)                    # lock: _lock
         self._lock = threading.RLock()
-        self.deployments_map: Dict[str, _Deployment] = {}
+        self.deployments_map: Dict[str, _Deployment] = {}  # lock: _lock
         self.grace_period_s = grace_period_s
         self.journal = journal                    # ExecutionJournal | None
         self.timeline: List[tuple] = []           # (model, event, t)
         # drain flags OUTLIVE the deployment entry: a preempted replica
         # must stay unschedulable after its undeploy, or the executor's
         # fault path would resurrect the very site the autoscaler revoked
-        self._draining: set = set()
+        self._draining: set = set()               # lock: _lock
 
     def _journal(self, model: str, event: str):
         if self.journal is not None:
@@ -224,7 +224,8 @@ class DeploymentManager:
     def _teardown(self, model_name: str, dep: _Deployment):
         """Physical teardown of a deployment already popped from the map."""
         t0 = time.time()
-        spec = self._specs.get(model_name)
+        with self._lock:
+            spec = self._specs.get(model_name)
         if spec is None or not spec.external:
             dep.connector.undeploy()
             self._journal(model_name, "undeploy")

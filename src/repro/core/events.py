@@ -138,9 +138,9 @@ class EventSink:
 
     def __init__(self, maxsize: int = 256):
         self._q: "queue.Queue" = queue.Queue(maxsize=max(1, maxsize))
-        self._seq = itertools.count()
+        self._seq = itertools.count()                 # lock: _lock
         self._abandoned = threading.Event()
-        self._closed = False
+        self._closed = False                          # lock: _lock
         self._lock = threading.Lock()
 
     def emit(self, ev: WorkflowEvent):

@@ -458,9 +458,9 @@ class Scheduler:
         self._lock = threading.RLock()
         # job name -> (service, candidate model names): the still-unplaced
         # queue, reported by the executor each tick (autoscaling runs only)
-        self._queued: Dict[str, Tuple[str, Tuple[str, ...]]] = {}
+        self._queued: Dict[str, Tuple[str, Tuple[str, ...]]] = {}  # lock: _lock
         # models with the drain flag up: placement skips their resources
-        self._draining: set = set()
+        self._draining: set = set()                                # lock: _lock
         self.topology = None
         if topology is not None:
             self.set_topology(topology)
@@ -523,12 +523,15 @@ class Scheduler:
 
     def _usable(self, available: Sequence[str]) -> Sequence[str]:
         """Filter a candidate resource list through the drain flags (the
-        no-drain fast path returns the input untouched)."""
-        if not self._draining:
-            return available
-        return [r for r in available
-                if (self.resources.get(r) is None
-                    or self.resources[r].model not in self._draining)]
+        no-drain fast path returns the input untouched).  Callers already
+        hold ``_lock``; the re-entrant acquire here keeps the invariant
+        local instead of relying on the call graph."""
+        with self._lock:
+            if not self._draining:
+                return available
+            return [r for r in available
+                    if (self.resources.get(r) is None
+                        or self.resources[r].model not in self._draining)]
 
     def schedule(self, job: JobDescription, available: Sequence[str],
                  remote_paths: RemotePaths) -> Optional[str]:
@@ -635,6 +638,19 @@ class Scheduler:
                 jobs=jobs, resources=resources, queue_depth=queue_depth,
                 service_queue_depth=service_depth, running=running,
                 draining=tuple(sorted(self._draining)))
+
+    def export_capacity(self) -> Dict[Tuple[str, str], int]:
+        """Registered resource slots per (model, service) — the live
+        capability view.  The plan-time analyzer substitutes this for the
+        declared replica counts when a document is submitted against an
+        already-deployed pool, so its satisfiability proofs reflect what
+        is actually registered rather than what the YAML promises."""
+        with self._lock:
+            out: Dict[Tuple[str, str], int] = {}
+            for r in self.resources.values():
+                key = (r.model, r.service)
+                out[key] = out.get(key, 0) + 1
+            return out
 
     def has_running(self) -> bool:
         """Any allocation still RUNNING, across every run sharing this

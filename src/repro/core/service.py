@@ -44,8 +44,9 @@ import warnings
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional
 
+from repro.core import analyzer as _analyzer
 from repro.core.autoscale import AutoscaleConfig, Autoscaler
-from repro.core.deployment import DeploymentManager, ModelSpec
+from repro.core.deployment import DeploymentManager, ModelSpec, replica_base
 from repro.core.events import EventSink, WorkflowCancelled
 from repro.core.executor import RunResult, StreamFlowExecutor
 from repro.core.persistence import CacheConfig, InvocationCache
@@ -426,8 +427,25 @@ class WorkflowService:
         ``models:`` block but pointed at a service lacking them raises
         :class:`ServiceError`.  ``workflow`` selects among multiple
         workflows in the document (optional when there is exactly one).
+
+        If the document opts in with an ``analyze:`` block, the plan-time
+        semantic analyzer (SF3xx) also runs — joined with the scheduler's
+        *live* registered capacity when this service shares one — and a
+        failing analysis raises
+        :class:`~repro.core.analyzer.WorkflowAnalysisError`, again before
+        any Run exists.  No block (or ``analyze: off``) skips the pass
+        entirely.
         """
         cfg = load_streamflow_file(doc, check=True)
+        if _analyzer.AnalyzeConfig.from_value(cfg.analyze) is not None:
+            live = None
+            if self.scheduler is not None:
+                live = {}
+                for (model, svc), n in \
+                        self.scheduler.export_capacity().items():
+                    key = (replica_base(model), svc)
+                    live[key] = live.get(key, 0) + n
+            _analyzer.gate(cfg, live_capacity=live)
         if workflow is None:
             if len(cfg.workflows) != 1:
                 raise ServiceError(

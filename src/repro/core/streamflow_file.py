@@ -83,6 +83,12 @@ class StreamFlowConfig:
     # targets, cooldown, spot (``preemptible``) semantics.  Absent/empty
     # means no Autoscaler object at all: the exact static-pool behaviour
     autoscale: Dict[str, Any] = field(default_factory=dict)
+    # the ``analyze:`` block — plan-time semantic analysis (SF3xx) gate
+    # for WorkflowService.submit_document.  Raw YAML value: ``analyze:
+    # off`` parses to False, absence to {}, both meaning the gate is off
+    # and the engine behaves exactly as before the analyzer existed;
+    # analyzer.AnalyzeConfig.from_value normalizes downstream
+    analyze: Any = field(default_factory=dict)
 
 
 def _check(cond: bool, msg: str):
@@ -310,8 +316,16 @@ def load(path_or_doc, *, check: Optional[bool] = None) -> StreamFlowConfig:
     if checking:
         _frontend.check_tools(tools, collector)
 
+    declared = doc.get("workflows") or {}
+    if checking and not declared:
+        # a document with nothing to run used to slip through as a silent
+        # "OK: 0 workflow(s)" — make it a first-class diagnostic
+        collector("SF150", "workflows",
+                  "document declares no workflows (missing or empty "
+                  "workflows: section) — nothing would run")
+
     workflows: Dict[str, WorkflowEntry] = {}
-    for name, w in doc["workflows"].items():
+    for name, w in declared.items():
         wtype = w.get("type", "python")
         if wtype == "python":
             _check("config" in w,
@@ -391,4 +405,5 @@ def load(path_or_doc, *, check: Optional[bool] = None) -> StreamFlowConfig:
         service=doc.get("service", {}),
         cache=cache,
         tools=tools,
-        autoscale=autoscale)
+        autoscale=autoscale,
+        analyze=doc.get("analyze", {}))

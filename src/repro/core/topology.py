@@ -43,6 +43,13 @@ from typing import Dict, List, Optional, Tuple
 MANAGEMENT = "__management__"
 
 
+class UnroutableError(RuntimeError):
+    """Raised under ``routing: strict`` when two sites share no declared
+    direct link: the management relay is not available as a fallback, so
+    the transfer cannot be executed at all (the analyzer's SF303 proves
+    this condition ahead of the run)."""
+
+
 @dataclass(frozen=True)
 class LinkSpec:
     """One directed inter-site link with a simulated cost model."""
@@ -81,6 +88,11 @@ class TopologyGraph:
     ``routing="direct"`` lets the planner use declared site-to-site links;
     ``routing="management"`` restricts every inter-model route to the
     paper's two-step copy (the R3 control), whatever links are declared.
+    ``routing="strict"`` goes the other way: only declared direct links
+    carry inter-site data — the management relay never backstops a missing
+    link, and routing two sites with no declared link raises
+    :class:`UnroutableError` (star edges still carry driver-owned data,
+    which is how external inputs arrive in the first place).
     """
 
     #: route() memo entries kept before the cache resets (a wide scatter
@@ -89,9 +101,9 @@ class TopologyGraph:
     ROUTE_CACHE_MAX = 4096
 
     def __init__(self, routing: str = "direct"):
-        if routing not in ("direct", "management"):
+        if routing not in ("direct", "management", "strict"):
             raise ValueError(f"unknown routing mode {routing!r}; "
-                             f"expected 'direct' or 'management'")
+                             f"expected 'direct', 'management' or 'strict'")
         self.routing = routing
         # (source, target) -> LinkSpec; management star edges included
         self._links: Dict[Tuple[str, str], LinkSpec] = {}
@@ -225,6 +237,13 @@ class TopologyGraph:
         elif target == MANAGEMENT:
             up = self.mgmt_link(source, outbound=True)
             route = Route([up], up.cost(n_bytes))
+        elif self.routing == "strict":
+            direct = self._links.get((source, target))
+            if direct is None:
+                raise UnroutableError(
+                    f"no direct link {source} -> {target} and "
+                    f"routing: strict forbids the management relay")
+            route = Route([direct], direct.cost(n_bytes))
         else:
             two_step = self.two_step_route(source, target, n_bytes)
             route = two_step
@@ -239,7 +258,22 @@ class TopologyGraph:
         return route
 
     def cost(self, source: str, target: str, n_bytes: int) -> float:
-        return self.route(source, target, n_bytes).cost
+        """Route cost in seconds; ``inf`` for a strict-mode unroutable
+        pair, so cost-weighted scoring (scheduler, stage-in ordering)
+        simply never prefers a placement it could not feed."""
+        try:
+            return self.route(source, target, n_bytes).cost
+        except UnroutableError:
+            return float("inf")
+
+    def can_route(self, source: str, target: str) -> bool:
+        """Whether any executable route exists (the analyzer's SF303
+        reachability predicate — always true outside strict mode)."""
+        try:
+            self.route(source, target, 0)
+        except UnroutableError:
+            return False
+        return True
 
     def describe(self) -> List[str]:
         """Human-readable edge list (benchmarks print this)."""

@@ -1,0 +1,241 @@
+"""Plan-time semantic analyzer (SF3xx): unit tests + the soundness
+properties.
+
+The two properties the analyzer stakes its name on, checked against the
+real pipelined executor on randomly drawn scatter/gather pipelines:
+
+* **No false deadlocks** — a plan the executor completes is never
+  flagged SF300 (slots release between invocations; a narrow site
+  serializes, it does not wedge).
+* **No missed wedges** — a gather barrier whose producers no resource
+  can accept is always flagged SF300, and the executor's runtime
+  deadlock guard confirms the prediction by actually wedging.
+
+``hypothesis`` ships in requirements-dev.txt and is installed in CI;
+local runs without it skip the property tests, not the unit tests.
+"""
+import pytest
+
+from repro.core import analyzer
+from repro.core.analyzer import (AnalyzeConfig, WorkflowAnalysisError,
+                                 analyze, gate)
+from repro.core.checker import WorkflowCheckError
+from repro.core.executor import StreamFlowExecutor
+from repro.core.streamflow_file import load
+from repro.core.topology import MANAGEMENT, TopologyGraph, UnroutableError
+
+
+def scatter_doc(width, replicas, *, models=None, work_model=None,
+                analyze_block=None):
+    """A split -> scatter(work) -> gather(agg) pipeline over command-stub
+    tools: executes instantly, wedges only when capacity says so."""
+    models = models or {"site": replicas}
+    work_model = work_model or next(iter(models))
+    doc = {
+        "version": "v1.0",
+        "models": {m: {"type": "local",
+                       "config": {"services": {"svc": {"replicas": r}}}}
+                   for m, r in models.items()},
+        "tools": {
+            "split": {"outputs": {"shard": "record"}},
+            "work": {"inputs": {"shard": "record"},
+                     "outputs": {"out": "record"}},
+            "agg": {"inputs": {"parts": "array<record>"},
+                    "outputs": {"summary": "record"}},
+        },
+        "workflows": {"w": {
+            "type": "declarative",
+            "steps": {
+                "/split": {"tool": "split", "streams": {"shard": width}},
+                "/work": {"tool": "work", "in": {"shard": "shard"},
+                          "scatter": ["shard"]},
+                "/agg": {"tool": "agg", "in": {"parts": "out"},
+                         "gather": ["parts"]},
+            },
+            "bindings": [
+                {"step": "/", "target": {"model": next(iter(models)),
+                                         "service": "svc"}},
+                {"step": "/work", "target": {"model": work_model,
+                                             "service": "svc"}},
+            ],
+        }},
+    }
+    if analyze_block is not None:
+        doc["analyze"] = analyze_block
+    return doc
+
+
+def _run(cfg, **kw):
+    ex = StreamFlowExecutor.from_config(cfg, **kw)
+    entry = next(iter(cfg.workflows.values()))
+    return ex.run(entry.workflow, entry.bindings, inputs={})
+
+
+def _codes(report):
+    return {d.code for d in report.diagnostics}
+
+
+# ---------------------------------------------------------------- config
+def test_analyze_config_from_value():
+    assert AnalyzeConfig.from_value(None) is None
+    assert AnalyzeConfig.from_value(False) is None
+    assert AnalyzeConfig.from_value({}) is None
+    assert AnalyzeConfig.from_value({"enabled": False}) is None
+    cfg = AnalyzeConfig.from_value(True)
+    assert cfg is not None and cfg.fail_on == "error"
+    cfg = AnalyzeConfig.from_value(
+        {"fail_on": "warning", "default_cost_s": 2.5, "costs": {"/a": 1.0}})
+    assert cfg.fail_on == "warning"
+    assert cfg.default_cost_s == 2.5 and cfg.costs == {"/a": 1.0}
+    with pytest.raises(ValueError):
+        AnalyzeConfig.from_value({"fail_on": "never"})
+    with pytest.raises(ValueError):
+        AnalyzeConfig.from_value({"bogus": 1})
+
+
+def test_gate_off_and_thresholds():
+    ok = load(scatter_doc(2, 2, analyze_block=True))
+    assert gate(ok) is not None          # analyzable, nothing to raise
+    # absent/off block -> gate is a no-op even on a wedged plan
+    wedged = load(scatter_doc(3, 0))
+    assert AnalyzeConfig.from_value(wedged.analyze) is None
+    assert gate(wedged) is None
+    # enabled -> errors raise, carrying the diagnostics + full report
+    wedged = load(scatter_doc(3, 0, analyze_block=True))
+    with pytest.raises(WorkflowAnalysisError) as ei:
+        gate(wedged)
+    assert {d.code for d in ei.value.diagnostics} >= {"SF300", "SF301"}
+    assert ei.value.report.cost                  # cost engine still ran
+    # fail_on: warning promotes SF310 to fatal
+    narrow = load(scatter_doc(4, 1,
+                              analyze_block={"fail_on": "warning"}))
+    with pytest.raises(WorkflowAnalysisError):
+        gate(narrow)
+    assert gate(load(scatter_doc(4, 1, analyze_block=True))) is not None
+
+
+# ------------------------------------------------------------ diagnostics
+def test_wedge_is_flagged_and_actually_wedges():
+    """SF300's ground truth: the analyzer's predicted wedge is the
+    executor's runtime deadlock, observed via its deadlock guard."""
+    cfg = load(scatter_doc(3, 0))
+    report = analyze(cfg)
+    assert {"SF300", "SF301"} <= _codes(report)
+    with pytest.raises(RuntimeError, match="scheduling deadlock"):
+        _run(cfg, deadlock_timeout_s=0.4)
+
+
+def test_serializing_scatter_completes_and_warns():
+    """The dual: 4-wide scatter on a 1-slot site completes (slots release
+    between invocations) — SF310 warning, never SF300."""
+    cfg = load(scatter_doc(4, 1))
+    report = analyze(cfg)
+    assert "SF300" not in _codes(report)
+    assert "SF310" in _codes(report)
+    assert not report.errors()
+    res = _run(cfg, deadlock_timeout_s=2.0)
+    assert len(res.timeline_rows()) == 6     # split + 4x work + agg
+
+
+def test_live_capacity_overrides_static_zero():
+    """A zero-replica declaration with real registered resources (the
+    autoscaler already scaled up) must not flag SF301/SF300."""
+    cfg = load(scatter_doc(3, 0))
+    live = {("site", "svc"): 2}
+    report = analyze(cfg, live_capacity=live)
+    assert not {"SF300", "SF301"} & _codes(report)
+
+
+def test_cost_report_shape():
+    report = analyze(load(scatter_doc(4, 2)),
+                     step_costs={"/work": 3.0}, default_cost_s=1.0)
+    cost = report.cost["w"]
+    assert cost["n_invocations"] == 6
+    # 4 x 3s of work over 2 slots: LB >= 2 waves of work + ends
+    assert cost["makespan_lower_bound_s"] >= cost["critical_path_s"]
+    assert cost["critical_path_s"] >= 1.0 + 3.0 + 1.0
+    assert cost["total_work_s"] == pytest.approx(1.0 + 4 * 3.0 + 1.0)
+    assert cost["critical_path"][0] == "/split"
+    assert cost["critical_path"][-1] == "/agg"
+
+
+def test_sf150_no_workflows():
+    doc = {"version": "v1.0",
+           "models": {"site": {"type": "local", "config": {}}}}
+    with pytest.raises(WorkflowCheckError) as ei:
+        load(doc)
+    assert {d.code for d in ei.value.diagnostics} == {"SF150"}
+    load(doc, check=False)                   # historical lazy behaviour
+    with pytest.raises(WorkflowCheckError):
+        load({**doc, "workflows": {}})       # empty mapping: same story
+
+
+# ---------------------------------------------------------- strict routing
+def test_strict_routing_refuses_relay():
+    topo = TopologyGraph(routing="strict")
+    topo.add_site("hpc")
+    topo.add_site("cloud")
+    assert not topo.can_route("hpc", "cloud")
+    assert topo.cost("hpc", "cloud", 1024) == float("inf")
+    with pytest.raises(UnroutableError):
+        topo.route("hpc", "cloud", 1024)
+    # driver-owned star edges stay legal: external inputs still arrive
+    assert topo.can_route(MANAGEMENT, "hpc")
+    assert topo.can_route("hpc", MANAGEMENT)
+
+
+def test_strict_routing_with_link_routes_directly():
+    topo = TopologyGraph(routing="strict")
+    topo.add_link("hpc", "cloud", bandwidth_mbps=100.0, symmetric=False)
+    assert topo.can_route("hpc", "cloud")
+    assert not topo.can_route("cloud", "hpc")    # asymmetric by choice
+    route = topo.route("hpc", "cloud", 1024)
+    assert [h.target for h in route.hops] == ["cloud"]
+    assert not route.via_management
+
+
+# ------------------------------------------------------------ service gate
+def _service_for(doc):
+    from repro.core import FaultConfig, ModelSpec, WorkflowService
+    models = {m: ModelSpec(m, spec["type"], spec.get("config") or {})
+              for m, spec in doc["models"].items()}
+    return WorkflowService(models, fault=FaultConfig(speculative=False),
+                           deadlock_timeout_s=0.5)
+
+
+def test_submit_document_gates_on_analyze_block():
+    """An ``analyze:``-opted document with a provable wedge is refused
+    before any Run exists; without the block the same document is
+    admitted (and would die at the runtime deadlock guard instead)."""
+    doc = scatter_doc(3, 0, analyze_block=True)
+    svc = _service_for(doc)
+    try:
+        with pytest.raises(WorkflowAnalysisError) as ei:
+            svc.submit_document(doc)
+        assert {d.code for d in ei.value.diagnostics} >= {"SF300"}
+        assert svc.list_runs() == []         # no admission state touched
+    finally:
+        svc.close()
+
+
+def test_submit_document_gate_credits_live_capacity():
+    """The gate joins the scheduler's *live* registered resources: the
+    same zero-replica declaration passes once the service's pool
+    actually has slots for that (model, service)."""
+    doc = scatter_doc(2, 0, analyze_block=True)
+    svc = _service_for(doc)
+    try:
+        svc.scheduler.register_resource("site-0", "site", "svc",
+                                        cores=2, memory_gb=4.0)
+        svc.scheduler.register_resource("site-1", "site", "svc",
+                                        cores=2, memory_gb=4.0)
+        # would raise without the live credit (cf. the test above)
+        rid = svc.submit_document(doc)
+        assert rid
+    finally:
+        svc.close()
+
+
+# The hypothesis property tests (soundness/completeness against the real
+# executor) live in test_analyzer_properties.py so a local environment
+# without hypothesis still runs everything above.

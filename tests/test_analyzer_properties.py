@@ -1,0 +1,51 @@
+"""Hypothesis properties tying the SF3xx analyzer to the real executor.
+
+* **Soundness** — a randomly drawn scatter/gather pipeline the pipelined
+  executor completes is never flagged SF300 (and carries no errors at
+  all when every slot count is positive and every step is bound).
+* **Completeness** — the seeded wedge shape (a gather whose producers no
+  resource accepts) is always flagged SF300+SF301; the runtime ground
+  truth for that shape is pinned by
+  ``test_analyzer.test_wedge_is_flagged_and_actually_wedges``.
+
+``hypothesis`` ships in requirements-dev.txt and is installed in CI;
+local runs without it skip this module instead of breaking collection.
+"""
+import pytest
+
+hypothesis = pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st  # noqa: E402
+
+from repro.core.analyzer import analyze  # noqa: E402
+from repro.core.streamflow_file import load  # noqa: E402
+
+from test_analyzer import _codes, _run, scatter_doc  # noqa: E402
+
+
+@settings(max_examples=12, deadline=None)
+@given(width=st.integers(1, 5), r_a=st.integers(1, 3),
+       r_b=st.integers(1, 3), split_site=st.booleans())
+def test_analyzer_never_flags_completing_plans(width, r_a, r_b,
+                                               split_site):
+    models = {"a": r_a}
+    work_model = "a"
+    if split_site:
+        models["b"] = r_b
+        work_model = "b"
+    cfg = load(scatter_doc(width, r_a, models=models,
+                           work_model=work_model))
+    report = analyze(cfg)
+    assert "SF300" not in _codes(report)
+    assert not report.errors(), [str(d) for d in report.errors()]
+    res = _run(cfg, deadlock_timeout_s=2.0)
+    assert len(res.timeline_rows()) == width + 2
+
+
+@settings(max_examples=8, deadline=None)
+@given(width=st.integers(2, 4), other=st.integers(1, 3))
+def test_analyzer_always_flags_seeded_wedges(width, other):
+    cfg = load(scatter_doc(width, other,
+                           models={"site": other, "dead": 0},
+                           work_model="dead"))
+    report = analyze(cfg)
+    assert {"SF300", "SF301"} <= _codes(report)

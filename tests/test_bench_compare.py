@@ -20,7 +20,8 @@ def _bench(*, serial=1.0, piped=0.5, scratch=3.0, resumed=1.0,
            p99_pooled=0.03, p99_perrun=0.6,
            mk_cold=2.0, mk_warm=0.1, bytes_cold=1_000_000, bytes_warm=40,
            warm_memoized=34, warm_invocations=34,
-           mk_static=0.8, mk_elastic=0.26, wasted=2, useful=16):
+           mk_static=0.8, mk_elastic=0.26, wasted=2, useful=16,
+           lb_ratio_unrolled=1.2, lb_ratio_scatter=1.8):
     return {"results": {
         "pipeline_makespan": [
             {"topology": "fig9", "mode": "serialized-fcfs",
@@ -70,6 +71,14 @@ def _bench(*, serial=1.0, piped=0.5, scratch=3.0, resumed=1.0,
             {"mode": "preempted", "makespan_s": mk_elastic,
              "useful_invocations": useful, "wasted_invocations": wasted},
         ],
+        "analyze_prediction": [
+            {"mode": "hand-unrolled", "ratio": lb_ratio_unrolled,
+             "predicted_lb_s": 1.0, "measured_s": lb_ratio_unrolled,
+             "errors": 0},
+            {"mode": "scatter", "ratio": lb_ratio_scatter,
+             "predicted_lb_s": 1.0, "measured_s": lb_ratio_scatter,
+             "errors": 0},
+        ],
     }}
 
 
@@ -91,6 +100,8 @@ def test_extract_metrics():
     assert m["cache_hit_rate"] == pytest.approx(1.0)
     assert m["autoscale_makespan_ratio"] == pytest.approx(0.325)
     assert m["autoscale_wasted_work_ratio"] == pytest.approx(0.125)
+    assert m["analyze_lb_ratio_unrolled"] == pytest.approx(1.2)
+    assert m["analyze_lb_ratio_scatter"] == pytest.approx(1.8)
 
 
 def _run(tmp_path, bench, baseline_bench=None, argv_extra=()):
@@ -199,6 +210,20 @@ def test_gate_fails_when_preemption_waste_explodes(tmp_path, capsys):
     assert _run(tmp_path, _bench(wasted=9)) == 1
     out = capsys.readouterr().out
     assert "autoscale_wasted_work_ratio" in out and "hard bound" in out
+
+
+def test_gate_fails_when_lower_bound_is_unsound(tmp_path, capsys):
+    # measured below the "lower bound": the prediction overpromised
+    assert _run(tmp_path, _bench(lb_ratio_scatter=0.93)) == 1
+    out = capsys.readouterr().out
+    assert "analyze_lb_ratio_scatter" in out and "hard bound" in out
+
+
+def test_gate_fails_when_prediction_goes_vacuous(tmp_path, capsys):
+    # measured over 3x the prediction: the bound stopped being useful
+    assert _run(tmp_path, _bench(lb_ratio_unrolled=3.4)) == 1
+    out = capsys.readouterr().out
+    assert "analyze_lb_ratio_unrolled" in out and "hard bound" in out
 
 
 def test_gate_fails_on_missing_benchmark_section(tmp_path, capsys):

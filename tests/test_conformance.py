@@ -16,13 +16,29 @@ import re
 import pytest
 import yaml
 
-from repro.core import checker, frontend, streamflow_file
+from repro.core import analyzer, checker, frontend, streamflow_file
 from repro.core.checker import CODES, WorkflowCheckError, dry_run
 from repro.core.streamflow_file import load
 
 CORPUS = os.path.join(os.path.dirname(__file__), "conformance")
 VALID = sorted(glob.glob(os.path.join(CORPUS, "valid", "*.yaml")))
 INVALID = sorted(glob.glob(os.path.join(CORPUS, "invalid", "*.yaml")))
+
+
+def _is_analysis(path):
+    """Analysis cases (``expect.analysis: true``) load clean and fail at
+    the SF3xx analyzer instead of the load-time checker."""
+    with open(path) as f:
+        case = yaml.safe_load(f)
+    return bool(case.get("expect", {}).get("analysis"))
+
+
+CHECKER_INVALID = [p for p in INVALID if not _is_analysis(p)]
+ANALYSIS_INVALID = [p for p in INVALID if _is_analysis(p)]
+
+#: load-time + analysis-time registries together; the corpus lints run
+#: against the union (the two families must stay disjoint)
+ALL_CODES = {**CODES, **analyzer.CODES}
 
 #: expect.config keys -> StreamFlowConfig attributes the round-trip
 #: cases may pin (the acceptance criterion: cache/service/topology stay
@@ -93,7 +109,7 @@ def test_valid_document_expands_after_load(path):
 # Invalid corpus: must fail the checker with the expected codes
 # ---------------------------------------------------------------------------
 
-@pytest.mark.parametrize("path", INVALID, ids=_ids(INVALID))
+@pytest.mark.parametrize("path", CHECKER_INVALID, ids=_ids(CHECKER_INVALID))
 def test_invalid_document(path):
     doc, expect = _case(path)
     with pytest.raises(WorkflowCheckError) as ei:
@@ -113,6 +129,48 @@ def test_invalid_document(path):
         assert d.code in CODES
         assert d.location and d.message
         assert str(d) == f"{d.code} {d.location}: {d.message}"
+
+
+@pytest.mark.parametrize("path", ANALYSIS_INVALID,
+                         ids=_ids(ANALYSIS_INVALID))
+def test_analysis_document(path):
+    """Analysis cases: the document loads clean (the SF1xx/SF2xx checker
+    cannot see the problem), then the SF3xx analyzer proves exactly the
+    expected code set."""
+    doc, expect = _case(path)
+    cfg = load(doc)                          # must NOT raise
+    report = analyzer.analyze(cfg)
+    assert report.diagnostics, "analysis case produced no diagnostics"
+    got = sorted({d.code for d in report.diagnostics})
+    assert got == sorted(expect["codes"]), \
+        "\n".join(str(d) for d in report.diagnostics)
+    for code, substring in (expect.get("locations") or {}).items():
+        locations = [d.location for d in report.diagnostics
+                     if d.code == code]
+        assert any(substring in loc for loc in locations), \
+            f"{code}: no location containing {substring!r} in {locations}"
+    for d in report.diagnostics:
+        assert d.code in analyzer.CODES
+        assert analyzer.SEVERITY[d.code] in ("error", "warning")
+        assert d.location and d.message
+
+
+@pytest.mark.parametrize("path", VALID, ids=_ids(VALID))
+def test_valid_document_analyzes_without_errors(path):
+    """Every valid corpus document passes the analyzer with zero
+    *errors* (warnings — serialization, relay volume — are allowed):
+    the same zero-error contract the CI analyze sweep enforces over
+    examples/."""
+    doc, _ = _case(path)
+    report = analyzer.analyze(load(doc))
+    assert not report.errors(), \
+        "\n".join(str(d) for d in report.errors())
+    # the cost engine must produce a well-formed report per workflow
+    for cost in report.cost.values():
+        assert cost["makespan_lower_bound_s"] >= cost["critical_path_s"] \
+            or abs(cost["makespan_lower_bound_s"]
+                   - cost["critical_path_s"]) < 1e-9
+        assert cost["n_invocations"] >= 0
 
 
 @pytest.mark.parametrize("path", INVALID, ids=_ids(INVALID))
@@ -135,9 +193,10 @@ def test_invalid_document_loads_with_check_off(path):
 # ---------------------------------------------------------------------------
 
 def _emitted_codes():
-    """Every SF-code literal in the checker/frontend/loader source."""
+    """Every SF-code literal in the checker/frontend/loader/analyzer
+    source."""
     emitted = set()
-    for mod in (checker, frontend, streamflow_file):
+    for mod in (checker, frontend, streamflow_file, analyzer):
         with open(mod.__file__) as f:
             src = f.read()
         # only literals in code positions: quoted, so the docstring
@@ -152,25 +211,35 @@ def test_corpus_size():
 
 
 def test_every_diagnostic_code_is_exercised():
-    """Adding a diagnostic to checker.CODES without an invalid-corpus
-    case exercising it fails here (the 'no untested diagnostics' CI
-    lint)."""
+    """Adding a diagnostic to checker.CODES or analyzer.CODES without an
+    invalid-corpus case exercising it fails here (the 'no untested
+    diagnostics' CI lint) — SF3xx codes count via analysis cases."""
     exercised = set()
     for path in INVALID:
         _, expect = _case(path)
         exercised |= set(expect["codes"])
-    unexercised = sorted(set(CODES) - exercised)
+    unexercised = sorted(set(ALL_CODES) - exercised)
     assert not unexercised, \
         f"diagnostic codes with no invalid-corpus case: {unexercised}"
-    unknown = sorted(exercised - set(CODES))
+    unknown = sorted(exercised - set(ALL_CODES))
     assert not unknown, f"corpus expects unregistered codes: {unknown}"
 
 
 def test_every_emitted_code_is_registered_and_vice_versa():
-    """The source emits exactly the codes CODES registers: an SF literal
-    outside the registry (or a registered code nothing can emit) is a
-    checker bug."""
+    """The source emits exactly the codes the registries declare: an SF
+    literal outside checker.CODES + analyzer.CODES (or a registered code
+    nothing can emit) is a checker bug."""
     emitted = _emitted_codes()
-    assert emitted == set(CODES), (
-        f"emitted-but-unregistered: {sorted(emitted - set(CODES))}, "
-        f"registered-but-never-emitted: {sorted(set(CODES) - emitted)}")
+    assert emitted == set(ALL_CODES), (
+        f"emitted-but-unregistered: {sorted(emitted - set(ALL_CODES))}, "
+        f"registered-but-never-emitted: "
+        f"{sorted(set(ALL_CODES) - emitted)}")
+
+
+def test_code_families_are_disjoint():
+    """Load-time (checker) and analysis-time (analyzer) registries must
+    never share a code — a diagnostic's family tells you *when* it can
+    fire."""
+    overlap = set(CODES) & set(analyzer.CODES)
+    assert not overlap, f"codes in both registries: {sorted(overlap)}"
+    assert set(analyzer.SEVERITY) == set(analyzer.CODES)

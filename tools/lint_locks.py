@@ -1,0 +1,215 @@
+#!/usr/bin/env python3
+"""Static concurrency lint: shared state must be touched under its lock.
+
+The engine's hot classes (Scheduler, DeploymentManager, Autoscaler,
+EventSink) guard mutable maps with a ``threading.Lock``/``RLock``.  The
+discipline is easy to break silently — a new helper reads
+``self._draining`` without the lock and nothing fails until a real race
+lands.  This lint makes the discipline declarative and machine-checked:
+
+* In ``__init__``, annotate a shared attribute's initialisation with a
+  trailing comment naming its lock::
+
+      self._queued: Dict[str, ...] = {}   # lock: _lock
+
+* Everywhere else in the class, any ``self._queued`` access must sit
+  lexically inside ``with self._lock:`` (nested blocks count; so does a
+  multi-item ``with``).  ``__init__`` itself is exempt — no other thread
+  can hold a reference yet.
+
+* A deliberate unguarded access carries an escape hatch stating why::
+
+      if not self._draining:   # unlocked: benign stale read, fast path
+
+The check is lexical, not interprocedural: a private helper that relies
+on *callers* holding the lock either takes the (re-entrant) lock itself
+or documents the contract with ``# unlocked:``.  Exit status is the
+violation count clamped to 1; run with no arguments to lint
+``src/repro/core``.
+"""
+from __future__ import annotations
+
+import ast
+import re
+import sys
+from dataclasses import dataclass
+from pathlib import Path
+from typing import Dict, List, Set
+
+#: trailing comment binding an attribute to its lock; prose may follow
+#: after a separator (``# lock: _lock; base -> live extras``)
+_ANNOTATION = re.compile(r"#\s*lock:\s*([A-Za-z_]\w*)")
+#: escape hatch: a justified, deliberate unguarded access
+_EXEMPTION = re.compile(r"#\s*unlocked:\s*\S")
+
+
+@dataclass
+class Violation:
+    path: str
+    line: int
+    attr: str
+    lock: str
+
+    def __str__(self) -> str:
+        return (f"{self.path}:{self.line}: self.{self.attr} accessed "
+                f"without holding self.{self.lock} "
+                f"(annotated '# lock: {self.lock}'; wrap the access in "
+                f"'with self.{self.lock}:' or add '# unlocked: <reason>')")
+
+
+def _self_attr(node: ast.AST) -> str | None:
+    """``self.X`` -> ``"X"``, else None."""
+    if (isinstance(node, ast.Attribute)
+            and isinstance(node.value, ast.Name)
+            and node.value.id == "self"):
+        return node.attr
+    return None
+
+
+def _annotated_attrs(init: ast.FunctionDef, annotations: Dict[int, str],
+                     used_lines: Set[int]) -> Dict[str, str]:
+    """Attributes initialised in ``__init__`` on a ``# lock:``-annotated
+    line -> the lock attribute guarding them.  Lines whose annotation
+    bound to an assignment are recorded in ``used_lines`` (the rest are
+    flagged as orphans)."""
+    guarded: Dict[str, str] = {}
+    for node in ast.walk(init):
+        targets: List[ast.expr] = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+            targets = [node.target]
+        for t in targets:
+            attr = _self_attr(t)
+            if attr is not None and node.lineno in annotations:
+                guarded[attr] = annotations[node.lineno]
+                used_lines.add(node.lineno)
+    return guarded
+
+
+def _init_assigned_attrs(init: ast.FunctionDef) -> Set[str]:
+    out: Set[str] = set()
+    for node in ast.walk(init):
+        targets: List[ast.expr] = []
+        if isinstance(node, ast.Assign):
+            targets = node.targets
+        elif isinstance(node, (ast.AnnAssign, ast.AugAssign)):
+            targets = [node.target]
+        for t in targets:
+            attr = _self_attr(t)
+            if attr is not None:
+                out.add(attr)
+    return out
+
+
+def _with_locks(node: ast.With, lock_names: Set[str]) -> Set[str]:
+    """Lock attributes acquired by a ``with`` statement's items."""
+    held: Set[str] = set()
+    for item in node.items:
+        attr = _self_attr(item.context_expr)
+        if attr is not None and attr in lock_names:
+            held.add(attr)
+    return held
+
+
+def _check_body(nodes, guarded: Dict[str, str], lock_names: Set[str],
+                held: Set[str], exempt_lines: Set[int], path: str,
+                out: List[Violation]) -> None:
+    for node in nodes:
+        if isinstance(node, ast.With):
+            # context expressions are evaluated before the locks are
+            # held — check them against the *outer* held set
+            for item in node.items:
+                if _self_attr(item.context_expr) is None:
+                    _check_body(
+                        list(ast.iter_child_nodes(item.context_expr)),
+                        guarded, lock_names, held, exempt_lines, path,
+                        out)
+            inner = held | _with_locks(node, lock_names)
+            _check_body(node.body, guarded, lock_names, inner,
+                        exempt_lines, path, out)
+            continue
+        attr = _self_attr(node)
+        if (attr in guarded and guarded[attr] not in held
+                and node.lineno not in exempt_lines):
+            out.append(Violation(path, node.lineno, attr, guarded[attr]))
+        _check_body(list(ast.iter_child_nodes(node)), guarded, lock_names,
+                    held, exempt_lines, path, out)
+
+
+def lint_source(src: str, path: str = "<string>") -> List[str]:
+    """Lint one module's source; returns human-readable problem lines
+    (violations plus annotation mistakes)."""
+    tree = ast.parse(src, filename=path)
+    annotations: Dict[int, str] = {}
+    exempt_lines: Set[int] = set()
+    for lineno, line in enumerate(src.splitlines(), start=1):
+        m = _ANNOTATION.search(line)
+        if m:
+            annotations[lineno] = m.group(1)
+        if _EXEMPTION.search(line):
+            exempt_lines.add(lineno)
+
+    problems: List[str] = []
+    used_annotation_lines: Set[int] = set()
+    for cls in [n for n in ast.walk(tree) if isinstance(n, ast.ClassDef)]:
+        init = next((n for n in cls.body
+                     if isinstance(n, ast.FunctionDef)
+                     and n.name == "__init__"), None)
+        if init is None:
+            continue
+        guarded = _annotated_attrs(init, annotations, used_annotation_lines)
+        if not guarded:
+            continue
+        init_attrs = _init_assigned_attrs(init)
+        lock_names = set(guarded.values())
+        for lock in sorted(lock_names):
+            if lock not in init_attrs:
+                problems.append(
+                    f"{path}:{init.lineno}: class {cls.name} annotates "
+                    f"state with '# lock: {lock}' but __init__ never "
+                    f"assigns self.{lock}")
+        violations: List[Violation] = []
+        for meth in cls.body:
+            if not isinstance(meth, (ast.FunctionDef,
+                                     ast.AsyncFunctionDef)):
+                continue
+            if meth.name == "__init__":
+                continue
+            _check_body(meth.body, guarded, lock_names, set(),
+                        exempt_lines, path, violations)
+        problems.extend(str(v) for v in violations)
+
+    for lineno in sorted(set(annotations) - used_annotation_lines):
+        problems.append(
+            f"{path}:{lineno}: '# lock: {annotations[lineno]}' comment "
+            f"is not attached to a self.<attr> assignment in __init__")
+    return problems
+
+
+def lint_paths(paths) -> List[str]:
+    problems: List[str] = []
+    for p in paths:
+        p = Path(p)
+        files = sorted(p.rglob("*.py")) if p.is_dir() else [p]
+        for f in files:
+            problems.extend(lint_source(f.read_text(), str(f)))
+    return problems
+
+
+def main(argv=None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    targets = argv or [str(Path(__file__).resolve().parents[1]
+                           / "src" / "repro" / "core")]
+    problems = lint_paths(targets)
+    for p in problems:
+        print(p)
+    if problems:
+        print(f"lint_locks: {len(problems)} problem(s)", file=sys.stderr)
+        return 1
+    print("lint_locks: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    raise SystemExit(main())
